@@ -1,0 +1,19 @@
+"""Shared benchmark plumbing: each module emits CSV rows
+``name,us_per_call,derived`` (derived carries the table's actual metric)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,37 @@
+"""Fig 10: inference on the single-node TPU-like edge device, batch 1."""
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.solver import annealing, exhaustive, random_search, solve
+from repro.hw.presets import tpu_like_edge
+from repro.workloads.nets import get_net
+
+from .common import emit, timed
+
+NETS = ["alexnet", "mobilenet", "mlp", "lstm"]
+
+
+def run(nets=None, budget=200):
+    hw = tpu_like_edge()
+    rows = []
+    for name in nets or NETS:
+        net = get_net(name, batch=1, training=False)
+        s, _ = timed(exhaustive.solve, net, hw, budget_per_layer=budget)
+        k, us_k = timed(solve, net, hw)
+        r, _ = timed(random_search.solve, net, hw, samples=600, p=0.85)
+        m, _ = timed(annealing.solve, net, hw, iters=10, batch=16)
+        base = s.total_energy_pj
+        rows.append((f"fig10.{name}.K", us_k,
+                     f"norm_energy={k.total_energy_pj / base:.3f}"))
+        rows.append((f"fig10.{name}.R", 0.0,
+                     f"norm_energy={r.total_energy_pj / base:.3f}"))
+        rows.append((f"fig10.{name}.M", 0.0,
+                     f"norm_energy={m.total_energy_pj / base:.3f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Fig 11: impact of the k_S segment-candidate count on energy and time."""
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.solver import solve
+from repro.hw.presets import eyeriss_multinode
+from repro.workloads.nets import get_net
+
+from .common import emit, timed
+
+
+def run(nets=("googlenet", "resnet"), ks_values=(1, 2, 4, 8)):
+    hw = eyeriss_multinode()
+    rows = []
+    for name in nets:
+        net = get_net(name, batch=64, training=False)
+        base = None
+        for ks in ks_values:
+            res, us = timed(solve, net, hw, k_s=ks)
+            if base is None:
+                base = res.total_energy_pj
+            rows.append((f"fig11.{name}.ks{ks}", us,
+                         f"norm_energy={res.total_energy_pj / base:.4f};"
+                         f"seconds={us / 1e6:.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Fig 7: dataflow energy for TRAINING on the multi-node Eyeriss-like
+accelerator (batch 64), KAPLA (K) vs exhaustive-on-directives (S),
+random (R), ML-based (M) — energies normalized to S."""
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.solver import annealing, exhaustive, random_search, solve
+from repro.hw.presets import eyeriss_multinode
+from repro.workloads.nets import get_net
+
+from .common import emit, timed
+
+NETS = ["alexnet", "mlp", "lstm"]       # training graphs (exhaustive-sized)
+BUDGET = 150
+
+
+def run(nets=None, budget=BUDGET, training=True):
+    hw = eyeriss_multinode()
+    rows = []
+    results = {}
+    for name in nets or NETS:
+        net = get_net(name, batch=64, training=training)
+        s, us_s = timed(exhaustive.solve, net, hw, budget_per_layer=budget)
+        k, us_k = timed(solve, net, hw)
+        r, us_r = timed(random_search.solve, net, hw, samples=400)
+        m, us_m = timed(annealing.solve, net, hw, iters=8, batch=12)
+        base = s.total_energy_pj
+        results[name] = dict(S=s, K=k, R=r, M=m)
+        rows.append((f"fig7.{name}.S", us_s, "norm_energy=1.000"))
+        rows.append((f"fig7.{name}.K", us_k,
+                     f"norm_energy={k.total_energy_pj / base:.3f}"))
+        rows.append((f"fig7.{name}.R", us_r,
+                     f"norm_energy={r.total_energy_pj / base:.3f}"))
+        rows.append((f"fig7.{name}.M", us_m,
+                     f"norm_energy={m.total_energy_pj / base:.3f}"))
+    emit(rows)
+    return results, rows
+
+
+if __name__ == "__main__":
+    run()

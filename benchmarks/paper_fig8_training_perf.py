@@ -1,0 +1,35 @@
+"""Fig 8: dataflow PERFORMANCE (latency) for training — same solvers,
+normalized latency (lower is better)."""
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.solver import annealing, exhaustive, random_search, solve
+from repro.hw.presets import eyeriss_multinode
+from repro.workloads.nets import get_net
+
+from .common import emit, timed
+
+NETS = ["alexnet", "mlp", "lstm"]
+
+
+def run(nets=None, budget=100):
+    hw = eyeriss_multinode()
+    rows = []
+    for name in nets or NETS:
+        net = get_net(name, batch=64, training=True)
+        s, _ = timed(exhaustive.solve, net, hw, budget_per_layer=budget)
+        k, us_k = timed(solve, net, hw, objective="perf")
+        r, _ = timed(random_search.solve, net, hw, samples=400)
+        base = s.total_latency_cycles
+        rows.append((f"fig8.{name}.K", us_k,
+                     f"norm_latency={k.total_latency_cycles / base:.3f}"))
+        rows.append((f"fig8.{name}.R", 0.0,
+                     f"norm_latency={r.total_latency_cycles / base:.3f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

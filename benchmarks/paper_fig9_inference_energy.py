@@ -1,0 +1,37 @@
+"""Fig 9: dataflow energy for INFERENCE on the multi-node accelerator."""
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.solver import annealing, exhaustive, random_search, solve
+from repro.hw.presets import eyeriss_multinode
+from repro.workloads.nets import get_net
+
+from .common import emit, timed
+
+NETS = ["alexnet", "mobilenet", "vggnet", "mlp", "lstm"]
+
+
+def run(nets=None, budget=100):
+    hw = eyeriss_multinode()
+    rows = []
+    for name in nets or NETS:
+        net = get_net(name, batch=64, training=False)
+        s, us_s = timed(exhaustive.solve, net, hw, budget_per_layer=budget)
+        k, us_k = timed(solve, net, hw)
+        r, us_r = timed(random_search.solve, net, hw, samples=400)
+        m, us_m = timed(annealing.solve, net, hw, iters=8, batch=12)
+        base = s.total_energy_pj
+        rows.append((f"fig9.{name}.K", us_k,
+                     f"norm_energy={k.total_energy_pj / base:.3f}"))
+        rows.append((f"fig9.{name}.R", us_r,
+                     f"norm_energy={r.total_energy_pj / base:.3f}"))
+        rows.append((f"fig9.{name}.M", us_m,
+                     f"norm_energy={m.total_energy_pj / base:.3f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Table VI: effectiveness of inter-layer conservative + Pareto pruning."""
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.solver import enumerate_segments
+from repro.core.solver.interlayer import PruneStats
+from repro.hw.presets import eyeriss_multinode
+from repro.workloads.nets import NETS, get_net
+
+from .common import emit, timed
+
+
+def run(nets=None):
+    hw = eyeriss_multinode()
+    rows = []
+    for name in nets or list(NETS):
+        net = get_net(name, batch=64, training=False)
+        stats = PruneStats()
+        # representative segment start (paper reports one per net)
+        _, us = timed(enumerate_segments, net, hw, 0, 4, stats)
+        pruned = 100.0 * (1 - stats.after_pareto / max(1, stats.total))
+        rows.append((f"tab6.{name}", us,
+                     f"total={stats.total};kept={stats.after_pareto};"
+                     f"pruned={pruned:.1f}%"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

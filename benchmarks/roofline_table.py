@@ -1,0 +1,36 @@
+"""Our roofline table: reads dry-run JSON records and prints the
+per-cell three-term roofline (the §Roofline artifact)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from .common import emit
+
+
+def run(path="dryrun_singlepod.json"):
+    if not os.path.exists(path):
+        print(f"# {path} missing — run "
+              "`python -m repro.launch.dryrun --out {path}` first")
+        return []
+    rows = []
+    for rec in json.load(open(path)):
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        name = f"roofline.{rec['arch']}.{rec['shape']}"
+        derived = (f"tc={r['t_compute'] * 1e3:.1f}ms;"
+                   f"tm={r['t_memory'] * 1e3:.1f}ms;"
+                   f"tx={r['t_collective'] * 1e3:.1f}ms;"
+                   f"bottleneck={r['bottleneck']};"
+                   f"rl_frac={r['roofline_fraction']:.3f}")
+        rows.append((name, rec.get("compile_seconds", 0) * 1e6, derived))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark runner — one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick|--full]``
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section filter, e.g. fig7,tab4")
+    args = ap.parse_args()
+
+    from . import (paper_fig7_training_energy, paper_fig8_training_perf,
+                   paper_fig9_inference_energy, paper_fig10_edge,
+                   paper_fig11_ks, paper_tab4_sched_time,
+                   paper_tab5_hw_sensitivity, paper_tab6_pruning,
+                   roofline_table)
+
+    sections = {
+        "fig7": paper_fig7_training_energy.run,
+        "fig8": paper_fig8_training_perf.run,
+        "fig9": paper_fig9_inference_energy.run,
+        "fig10": paper_fig10_edge.run,
+        "tab4": paper_tab4_sched_time.run,
+        "tab5": paper_tab5_hw_sensitivity.run,
+        "fig11": paper_fig11_ks.run,
+        "tab6": paper_tab6_pruning.run,
+        "roofline": roofline_table.run,
+    }
+    wanted = args.only.split(",") if args.only else list(sections)
+    print("name,us_per_call,derived")
+    for key in wanted:
+        t0 = time.perf_counter()
+        print(f"# === {key} ===")
+        sections[key]()
+        print(f"# {key} took {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Show the KAPLA-style autoshard plan for an assigned architecture x shape
+(without needing 512 devices): candidate log, chosen specs, HBM accounting.
+
+  PYTHONPATH=src python examples/autoshard_plan.py --arch kimi-k2-1t-a32b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.core.autoshard import plan_sharding
+from repro.models.api import build_model
+from repro.optim.optimizers import make_optimizer
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="kimi-k2-1t-a32b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16}
+                    if args.multi_pod else {"data": 16, "model": 16})
+    api = build_model(cfg)
+    param_sds = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    opt_sds = jax.eval_shape(make_optimizer(cfg.optimizer).init, param_sds) \
+        if shape.mode == "train" else {}
+    plan = plan_sharding(cfg, shape, mesh, param_sds, opt_sds)
+
+    print(f"plan for {args.arch} x {args.shape} on {mesh.shape}:")
+    print("  solver candidate log (validity check + cost estimate):")
+    for n in plan.notes:
+        print(f"    {n}")
+    print(f"  chosen: zero={plan.zero_opt} attn_sharded={plan.attn_sharded} "
+          f"hbm/chip={plan.hbm_gb_per_chip:.1f} GiB")
+    print("  example param specs:")
+    shown = 0
+    flat = jax.tree_util.tree_flatten_with_path(
+        plan.param_specs, is_leaf=lambda x: hasattr(x, "index"))[0]
+    for path, spec in flat[:60]:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if any(t in name for t in ("wq", "wi/", "embed", "lm_head", "w_x",
+                                   "moe")):
+            print(f"    {name}: {spec}")
+            shown += 1
+            if shown > 8:
+                break
+
+
+if __name__ == "__main__":
+    main()

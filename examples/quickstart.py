@@ -1,0 +1,44 @@
+#!/usr/bin/env python
+"""Quickstart: KAPLA schedules AlexNet on the 16x16-node Eyeriss-like
+accelerator and prints the winning tensor-centric directives (paper
+Listing-1 style), the energy/latency, and a comparison with random search.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.solver import random_search, solve
+from repro.hw.presets import eyeriss_multinode
+from repro.workloads.nets import get_net
+
+
+def main():
+    hw = eyeriss_multinode()
+    net = get_net("alexnet", batch=64)
+    print(f"scheduling {net.name}: {len(net)} layers on {hw.name} "
+          f"({hw.total_pes} PEs)")
+
+    res = solve(net, hw)
+    print(f"\nKAPLA: energy {res.total_energy_pj / 1e9:.2f} mJ, "
+          f"latency {res.total_latency_cycles / hw.freq_hz * 1e3:.2f} ms, "
+          f"solved in {res.solve_seconds:.2f} s")
+    print(f"inter-layer chains kept: k_S={len(res.chain.segments)} segments")
+    st = res.prune_stats
+    print(f"pruning: {st.total} inter-layer candidates -> "
+          f"{st.after_pareto} after validity+Pareto "
+          f"({100 * (1 - st.after_pareto / st.total):.1f}% pruned)")
+
+    print("\n--- directives for conv2 (row-stationary, node-parallel) ---")
+    for d in res.layer_schemes["conv2"].to_directives(
+            ["REGF", "GBUF", "DRAM"]):
+        print(d)
+
+    rnd = random_search.solve(net, hw, samples=500)
+    print(f"\nrandom search: {rnd.total_energy_pj / res.total_energy_pj:.2f}x"
+          " KAPLA energy")
+
+
+if __name__ == "__main__":
+    main()

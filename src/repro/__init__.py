@@ -1,0 +1,4 @@
+"""repro: KAPLA dataflow representation + solver (the paper), and the
+pod-scale JAX framework it drives (models, kernels, autoshard, runtime)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,112 @@
+"""Sharded checkpointing: per-host npz payloads + a JSON manifest,
+written atomically (tmp + rename) so a mid-write failure never corrupts the
+latest checkpoint.  Restore reshards to whatever mesh is current — the
+elastic-rescale path (runtime/fault.py) relies on this.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or arr.dtype.itemsize == 0:
+            arr = np.asarray(jax.numpy.asarray(leaf, jax.numpy.float32))
+        elif str(arr.dtype) == "bfloat16":
+            arr = arr.astype(np.float32)   # npz has no native bf16
+        out[key] = arr
+    return out
+
+
+def _unflatten(template: PyTree, flat: Dict[str, np.ndarray]) -> PyTree:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        try:
+            leaves.append(arr.astype(leaf.dtype))
+        except (TypeError, ValueError):
+            # bf16 & friends: cast through jax (ml_dtypes-aware)
+            leaves.append(np.asarray(jax.numpy.asarray(arr)
+                                     .astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, params: PyTree, opt_state: PyTree,
+         extra: Optional[Dict[str, Any]] = None, host_index: int = 0,
+         keep: int = 3) -> str:
+    """Write checkpoint ``step`` atomically; returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=ckpt_dir)
+    try:
+        np.savez(os.path.join(tmp, f"params_h{host_index}.npz"),
+                 **_flatten(params))
+        np.savez(os.path.join(tmp, f"opt_h{host_index}.npz"),
+                 **_flatten(opt_state))
+        manifest = {"step": step, "time": time.time(),
+                    "host_index": host_index,
+                    "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)           # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and
+             os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, params_template: PyTree,
+            opt_template: PyTree, step: Optional[int] = None,
+            host_index: int = 0) -> Tuple[PyTree, PyTree, Dict[str, Any]]:
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    p = dict(np.load(os.path.join(d, f"params_h{host_index}.npz"),
+                     allow_pickle=False))
+    o = dict(np.load(os.path.join(d, f"opt_h{host_index}.npz"),
+                     allow_pickle=False))
+    return (_unflatten(params_template, p), _unflatten(opt_template, o),
+            manifest)

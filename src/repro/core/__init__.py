@@ -1,0 +1,3 @@
+from . import autoshard, cost_model, directives, estimate, solver
+
+__all__ = ["autoshard", "cost_model", "directives", "estimate", "solver"]

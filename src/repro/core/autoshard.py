@@ -1,0 +1,357 @@
+"""KAPLA -> mesh sharding: the paper's solver structure applied to TPU pods.
+
+The mapping (DESIGN.md §2): `stack` over mesh axes = PartitionSpec axis
+assignment; `shr` (buffer sharing) = ZeRO-style optimizer-state sharding over
+the data axis; validity check = per-chip HBM footprint; efficiency estimate =
+the same 3-term roofline (compute / HBM / ICI) reported in EXPERIMENTS.md.
+
+``plan_sharding`` enumerates a small candidate set (with/without ZeRO,
+attention sharded vs replicated where head counts don't divide the model
+axis), runs the conservative validity check on each (never rejects a plan
+that could fit), estimates cost for the survivors, and returns the best —
+inter-layer-style pruning + prioritization, at pod scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..hw.template import TPUPodSpec
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    cfg_name: str
+    shape_name: str
+    param_specs: PyTree
+    opt_specs: PyTree
+    batch_specs: Dict[str, Any]
+    cache_specs: Optional[PyTree]
+    zero_opt: bool
+    attn_sharded: bool
+    hbm_gb_per_chip: float
+    est_step_seconds: float
+    notes: List[str]
+
+    def param_shardings(self, mesh):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), self.param_specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+    def opt_shardings(self, mesh):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), self.opt_specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _sanitize(spec: P, shape: Tuple[int, ...], axis_sizes: Dict[str, int],
+              ) -> P:
+    """Drop shardings whose dim is not divisible by the axis size (the
+    validity guard: never emit a spec GSPMD would have to pad)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, n) in enumerate(zip(entries, shape)):
+        if e is None:
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        sz = math.prod(axis_sizes.get(a, 1) for a in axes)
+        if sz == 0 or n % sz != 0:
+            entries[i] = None
+    return P(*entries)
+
+
+def _param_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
+                cfg: ModelConfig, tp: int, attn_sharded: bool) -> P:
+    raw = _param_spec_raw(names, shape, cfg, tp, attn_sharded)
+    return _sanitize(raw, shape, {"model": tp})
+
+
+def _param_spec_raw(names: Tuple[str, ...], shape: Tuple[int, ...],
+                    cfg: ModelConfig, tp: int, attn_sharded: bool) -> P:
+    """Sharding rules per parameter family.  Stacked layer params carry a
+    leading L dim (never sharded); the 'shared' hybrid block does not."""
+    name = names[-1]
+    stacked = "blocks" in names            # leading layer axis
+    lead = (None,) * (len(shape) - 2) if len(shape) >= 2 else ()
+
+    def spec(*tail):
+        # pad leading unsharded dims so len(spec) == ndim
+        pad = (None,) * (len(shape) - len(tail))
+        return P(*(pad + tail))
+
+    if name == "embed":
+        return P("model", None)            # vocab-parallel embedding
+    if name == "lm_head":
+        return P(None, "model")            # vocab-parallel logits
+    if name in ("wq",):
+        return spec(None, "model") if attn_sharded else spec(None, None)
+    if name in ("wk", "wv"):
+        kv_ok = (cfg.num_kv_heads % tp == 0) and attn_sharded
+        return spec(None, "model") if kv_ok else spec(None, None)
+    if name in ("bq",):
+        return spec("model") if attn_sharded else spec(None)
+    if name in ("bk", "bv"):
+        kv_ok = (cfg.num_kv_heads % tp == 0) and attn_sharded
+        return spec("model") if kv_ok else spec(None)
+    if name == "wo" and "attn" in names:
+        return spec("model", None) if attn_sharded else spec(None, None)
+    if name in ("wi", "wg") and "moe" in names and len(shape) >= 3 \
+            and names[-2] != "shared":
+        return spec("model", None, None)   # expert-parallel
+    if name == "wo" and "moe" in names and names[-2] != "shared":
+        return spec("model", None, None)
+    if name == "router":
+        return spec(None, None)
+    if name in ("wi", "wg"):               # dense / shared-expert FFN
+        return spec(None, "model")
+    if name == "wo":
+        return spec("model", None)
+    if name in ("w_x", "w_z"):
+        return spec(None, "model")         # di (== heads) over model
+    if name == "w_dt":
+        return spec(None, "model") if cfg.ssm_heads % tp == 0 \
+            else spec(None, None)
+    if name in ("w_b", "w_c"):
+        return spec(None, None)            # small shared projections
+    if name == "w_out":
+        return spec("model", None)
+    if name in ("conv_x_w",):
+        return spec(None, "model")
+    if name in ("conv_x_b", "norm") and len(shape) >= 1:
+        return spec("model")
+    if name in ("a_log", "dt_bias", "d_skip"):
+        return spec("model") if cfg.ssm_heads % tp == 0 else spec(None)
+    return P(*((None,) * len(shape)))      # norms, small biases, misc
+
+
+def _zero_spec(pspec: P, shape: Tuple[int, ...], dp_axes: Tuple[str, ...],
+               dp_size: int) -> P:
+    """ZeRO: shard the first still-replicated, divisible dim over data —
+    the paper's buffer-sharing `shr` (one copy across sibling buffers)."""
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (e, n) in enumerate(zip(entries, shape)):
+        if e is None and n % dp_size == 0 and n >= dp_size:
+            entries[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            return P(*entries)
+    return P(*entries)
+
+
+def _bytes_of(shape, dtype) -> float:
+    return math.prod(shape) * jnp.dtype(dtype).itemsize
+
+
+def _sharded_bytes(shape, dtype, spec: P, mesh_shape: Dict[str, int]) -> float:
+    b = _bytes_of(shape, dtype)
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            b /= mesh_shape[a]
+    return b
+
+
+def plan_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  param_shapes: PyTree, opt_state_shapes: PyTree,
+                  cache_shapes: Optional[PyTree] = None,
+                  pod: TPUPodSpec = TPUPodSpec()) -> ShardingPlan:
+    """Pick the sharding plan via conservative validity + cost estimate."""
+    mesh_shape = dict(mesh.shape)
+    tp = mesh_shape.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh_shape)
+    dp_size = math.prod(mesh_shape[a] for a in dp_axes) if dp_axes else 1
+    chips = math.prod(mesh_shape.values())
+
+    heads_ok = cfg.family in ("dense", "moe") and cfg.num_heads % tp == 0
+    candidates = []
+    for zero in (True, False):
+        for attn_sharded in ((True, False) if heads_ok else (False,)):
+            candidates.append((zero, attn_sharded, False))
+    if cfg.family in ("ssm", "hybrid"):
+        candidates = [(z, cfg.family == "hybrid" and
+                       cfg.num_heads % tp == 0, False) for z in (True, False)]
+    # FSDP (fully-sharded params over the data axes) is the fallback tier:
+    # required for the 1T-param config whose params exceed TP-only HBM.
+    # jit all-gathers each scan iteration's layer params on demand.
+    candidates += [(True, heads_ok, True)]
+
+    best = None
+    notes: List[str] = []
+    flat_params = jax.tree_util.tree_flatten_with_path(param_shapes)[0]
+
+    for zero, attn_sharded, fsdp in candidates:
+        # --- build specs ------------------------------------------------
+        def pspec_fn(path, leaf):
+            base = _param_spec(_path_names(path), leaf.shape, cfg, tp,
+                               attn_sharded)
+            if fsdp and dp_axes:
+                return _zero_spec(base, leaf.shape, dp_axes, dp_size)
+            return base
+        param_specs = jax.tree_util.tree_map_with_path(pspec_fn, param_shapes)
+
+        def ospec_fn(path, leaf):
+            names = _path_names(path)
+            # optimizer state mirrors the param rules on matching suffixes
+            base = _param_spec(names, leaf.shape, cfg, tp, attn_sharded)
+            base = P(*(list(base) + [None] * (len(leaf.shape) - len(base)))) \
+                if len(base) < len(leaf.shape) else \
+                P(*list(base)[: len(leaf.shape)])
+            if zero and dp_axes:
+                return _zero_spec(base, leaf.shape, dp_axes, dp_size)
+            return base
+        opt_specs = jax.tree_util.tree_map_with_path(ospec_fn,
+                                                     opt_state_shapes)
+
+        # --- conservative validity: per-chip HBM footprint ----------------
+        pb = sum(_sharded_bytes(l.shape, l.dtype,
+                                pspec_fn(p, l), mesh_shape)
+                 for p, l in flat_params)
+        ob = sum(_sharded_bytes(l.shape, l.dtype, ospec_fn(p, l), mesh_shape)
+                 for p, l in
+                 jax.tree_util.tree_flatten_with_path(opt_state_shapes)[0])
+        grad_b = pb if shape.mode == "train" else 0.0
+        # activation working set (scan keeps one block live; remat shrinks
+        # the saved-residual term)
+        tokens_local = shape.global_batch * (shape.seq_len if shape.mode !=
+                                             "decode" else 1) / max(1, dp_size)
+        act_mult = 4 if cfg.remat == "block" else 12
+        act_b = tokens_local * cfg.d_model * 2 * act_mult \
+            * (1 if shape.mode != "train" else cfg.num_layers ** 0.5)
+        if cfg.seq_shard and tp > 1:
+            act_b /= tp        # sequence-parallel residuals
+        cache_b = 0.0
+        if cache_shapes is not None:
+            cache_b = sum(
+                _sharded_bytes(l.shape, l.dtype,
+                               _cache_spec(_path_names(p), l.shape, cfg, tp,
+                                           dp_axes, shape), mesh_shape)
+                for p, l in
+                jax.tree_util.tree_flatten_with_path(cache_shapes)[0])
+        hbm = pb + ob + grad_b + act_b + cache_b
+        valid = hbm <= pod.hbm_bytes * 0.92
+        # --- cost estimate: 3-term roofline -------------------------------
+        flops = 6.0 * cfg.active_param_count() * shape.global_batch \
+            * (shape.seq_len if shape.mode == "train" else
+               (shape.seq_len if shape.mode == "prefill" else 1))
+        if shape.mode != "train":
+            flops /= 3.0                   # no backward
+        t_compute = flops / (chips * pod.peak_flops_bf16)
+        t_memory = (pb + ob + cache_b) / pod.hbm_bw
+        # collective estimate: TP all-reduces of activations per layer
+        t_coll = 0.0
+        if tp > 1:
+            act_bytes = tokens_local * cfg.d_model * 2
+            per_layer = 2 * act_bytes * 2 * (tp - 1) / tp / \
+                (pod.ici_link_bw * pod.ici_links_per_chip)
+            t_coll = per_layer * cfg.num_layers
+        if zero and shape.mode == "train":
+            t_coll += pb / (pod.ici_link_bw * pod.ici_links_per_chip)
+        if fsdp:
+            # per-step param all-gather over the data axes
+            t_coll += pb * (dp_size - 1) / max(1, dp_size) \
+                / (pod.ici_link_bw * pod.ici_links_per_chip) * 2.0
+        est = max(t_compute, t_memory, t_coll)
+        tag = f"zero={zero} attn_sharded={attn_sharded} fsdp={fsdp}: " \
+              f"hbm={hbm / 2**30:.1f}GiB valid={valid} est={est * 1e3:.1f}ms"
+        notes.append(tag)
+        # FSDP is fallback-only: pick it when nothing else fits
+        if valid and (best is None or
+                      (est < best[0] and fsdp == best[6]) or
+                      (not fsdp and best[6])):
+            best = (est, zero, attn_sharded, param_specs, opt_specs,
+                    hbm / 2 ** 30, fsdp)
+
+    if best is None:
+        # fall back to the most aggressive sharding even if over budget —
+        # report the overflow rather than refusing to plan
+        zero, attn_sharded = True, heads_ok
+        fsdp = True
+        best_est = float("inf")
+        def pspec_fn(path, leaf):
+            base = _param_spec(_path_names(path), leaf.shape, cfg, tp,
+                               attn_sharded)
+            return _zero_spec(base, leaf.shape, dp_axes, dp_size) \
+                if dp_axes else base
+        param_specs = jax.tree_util.tree_map_with_path(pspec_fn, param_shapes)
+        def ospec_fn(path, leaf):
+            base = _param_spec(_path_names(path), leaf.shape, cfg, tp,
+                               attn_sharded)
+            return _zero_spec(base, leaf.shape, dp_axes, dp_size) \
+                if dp_axes else base
+        opt_specs = jax.tree_util.tree_map_with_path(ospec_fn,
+                                                     opt_state_shapes)
+        notes.append("WARNING: no candidate fits HBM; using max sharding")
+        best = (best_est, zero, attn_sharded, param_specs, opt_specs,
+                float("nan"), fsdp)
+
+    est, zero, attn_sharded, param_specs, opt_specs, hbm_gb, fsdp = best
+
+    # --- data / cache specs ---------------------------------------------
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    batchable = shape.global_batch >= dp_size
+    bspec = dp if batchable else None
+    if cfg.frontend == "embed" and shape.mode != "decode":
+        in_spec = P(bspec, None, None)
+    else:
+        in_spec = P(bspec, None)
+    batch_specs = {"inputs": in_spec, "targets": P(bspec, None)}
+
+    cache_specs = None
+    if cache_shapes is not None:
+        cache_specs = jax.tree_util.tree_map_with_path(
+            lambda p, l: _cache_spec(_path_names(p), l.shape, cfg, tp,
+                                     dp_axes, shape), cache_shapes)
+
+    return ShardingPlan(cfg.name, shape.name, param_specs, opt_specs,
+                        batch_specs, cache_specs, zero, attn_sharded,
+                        hbm_gb, est, notes)
+
+
+def _cache_spec(names: Tuple[str, ...], shape_t: Tuple[int, ...],
+                cfg: ModelConfig, tp: int, dp_axes: Tuple[str, ...],
+                shape: ShapeConfig) -> P:
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= {"pod": 2, "data": 16}.get(a, 16)
+    name = names[-1]
+    B = shape.global_batch
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    bspec = dp if B >= dp_size else None
+    seq_spec = None if B >= dp_size or not dp_axes else "data"
+    if name in ("k", "v", "k_scale", "v_scale"):
+        kv_ok = cfg.num_kv_heads % tp == 0
+        if kv_ok:
+            return P(None, bspec, "model", seq_spec, None)
+        # KV heads don't divide the model axis: shard the cache SEQUENCE
+        # over 'model' instead (sequence-parallel decode attention — GSPMD
+        # inserts the partial-softmax all-reduce); never replicate a
+        # multi-GiB cache
+        return P(None, bspec, None, "model", None)
+    if name == "ssm":
+        h_ok = cfg.ssm_heads % tp == 0
+        return P(None, bspec, "model" if h_ok else None, None, None)
+    if name == "conv_x":
+        return P(None, bspec, None, "model")
+    if name in ("conv_b", "conv_c"):
+        return P(None, bspec, None, None)
+    return P(*((None,) * len(shape_t)))

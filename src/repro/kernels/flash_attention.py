@@ -1,0 +1,120 @@
+"""Flash attention Pallas TPU kernel (blocked online-softmax).
+
+TPU adaptation of the FlashAttention insight: tile Q into VMEM-resident
+blocks, stream K/V blocks through VMEM, and keep running (max, sum, acc)
+statistics in VMEM scratch so the S x S score matrix never materializes in
+HBM.  Block shapes are MXU-aligned (multiples of 128 in the contracting and
+lane dims).  Supports GQA (q-head groups share a KV head), causal masking,
+sliding-window (local) attention, and logit soft-capping (Gemma2).
+
+Validated against ``ref.attention_ref`` with ``interpret=True`` on CPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, seq_k: int, causal: bool,
+                  window: int, logit_softcap: float, scale: float,
+                  q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if logit_softcap > 0:
+        s = jnp.tanh(s / logit_softcap) * logit_softcap
+
+    # positions: queries may be right-aligned into a longer KV (decode)
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0) \
+        + q_offset
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    m_ref[...] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom[:, None]) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_softcap", "block_q",
+                     "block_k", "interpret", "scale"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0,
+                    logit_softcap: float = 0.0,
+                    scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B, H, Sq, D]; k, v: [B, KV, Sk, D]; H % KV == 0."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    qpk = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    scale = scale if scale is not None else D ** -0.5
+    grid = (B, H, Sq // block_q, Sk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_k=Sk,
+        causal=causal, window=window, logit_softcap=logit_softcap,
+        scale=scale, q_offset=Sk - Sq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik, qpk_=qpk: (b, h // qpk_, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik, qpk_=qpk: (b, h // qpk_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),    # running accumulator
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

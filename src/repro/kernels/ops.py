@@ -1,0 +1,325 @@
+"""Public kernel API: jit'd wrappers that dispatch to Pallas TPU kernels on
+TPU backends and to memory-efficient pure-jnp implementations elsewhere
+(CPU dry-run / tests).  Both paths are validated against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_intra_chunk
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _chunked_attention_jnp(q, k, v, causal, window, logit_softcap, scale,
+                           block_k: int = 512, return_lse: bool = False):
+    """Online-softmax attention in pure jnp (lax.scan over KV blocks): the
+    S x S score matrix never materializes, so compiled HBM bytes match the
+    flash kernel's — keeping CPU dry-run rooflines honest."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    qpk = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    block_k = min(block_k, Sk)
+    nk = Sk // block_k
+    qf = q.astype(jnp.float32) * scale
+    q_offset = Sk - Sq
+    qpos = jnp.arange(Sq) + q_offset
+
+    kb = k.reshape(B, KV, nk, block_k, D)
+    vb = v.reshape(B, KV, nk, block_k, D)
+
+    def step(carry, ik):
+        acc, m, l = carry
+        kc = jnp.repeat(kb[:, :, ik], qpk, axis=1).astype(jnp.float32)
+        vc = jnp.repeat(vb[:, :, ik], qpk, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc)
+        if logit_softcap > 0:
+            s = jnp.tanh(s / logit_softcap) * logit_softcap
+        kpos = ik * block_k + jnp.arange(block_k)
+        mask = jnp.ones((Sq, block_k), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.arange(nk))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    if return_lse:
+        return out, m + jnp.log(jnp.maximum(l, 1e-30))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with a custom VJP: the backward pass RECOMPUTES the chunk
+# probabilities from (q, k, v, lse) instead of letting autodiff save every
+# per-chunk intermediate of the forward scan.  Residual memory drops from
+# O(S^2 / block) stacked tensors to O(S x D) — the single biggest memory-term
+# lever in the train-cell roofline (§Perf iteration 3).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_flash_vjp(causal: bool, window: int, logit_softcap: float,
+                    scale_key: float, block_k: int):
+    scale = scale_key
+
+    def fwd_only(q, k, v):
+        return _chunked_attention_jnp(q, k, v, causal, window,
+                                      logit_softcap, scale, block_k)
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return fwd_only(q, k, v)
+
+    def attn_fwd(q, k, v):
+        out, lse = _chunked_attention_jnp(q, k, v, causal, window,
+                                          logit_softcap, scale, block_k,
+                                          return_lse=True)
+        return out, (q, k, v, out, lse)
+
+    def attn_bwd(res, do):
+        q, k, v, o, lse = res
+        B, H, Sq, D = q.shape
+        KV, Sk = k.shape[1], k.shape[2]
+        qpk = H // KV
+        bk = min(block_k, Sk)
+        nk = Sk // bk
+        qf = q.astype(jnp.float32)
+        dof = do.astype(jnp.float32)
+        delta = jnp.sum(dof * o.astype(jnp.float32), axis=-1)   # [B,H,Sq]
+        q_offset = Sk - Sq
+        qpos = jnp.arange(Sq) + q_offset
+        kb = k.reshape(B, KV, nk, bk, D)
+        vb = v.reshape(B, KV, nk, bk, D)
+
+        def chunk(dq, ik):
+            kc = jnp.repeat(kb[:, :, ik], qpk, axis=1).astype(jnp.float32)
+            vc = jnp.repeat(vb[:, :, ik], qpk, axis=1).astype(jnp.float32)
+            s_raw = jnp.einsum("bhqd,bhkd->bhqk", qf, kc) * scale
+            if logit_softcap > 0:
+                t = jnp.tanh(s_raw / logit_softcap)
+                s = t * logit_softcap
+            else:
+                s = s_raw
+            kpos = ik * bk + jnp.arange(bk)
+            mask = jnp.ones((Sq, bk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            p = jnp.where(mask[None, None],
+                          jnp.exp(s - lse[..., None]), 0.0)     # [B,H,q,bk]
+            dv_c = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vc)
+            ds = p * (dp - delta[..., None])
+            if logit_softcap > 0:
+                ds = ds * (1.0 - jnp.square(t))
+            ds = ds * scale
+            dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, kc)
+            dk_c = jnp.einsum("bhqk,bhqd->bhkd", ds, qf)
+            # GQA: fold q-head groups back onto shared KV heads
+            dk_c = dk_c.reshape(B, KV, qpk, bk, D).sum(axis=2)
+            dv_c = dv_c.reshape(B, KV, qpk, bk, D).sum(axis=2)
+            return dq, (dk_c, dv_c)
+
+        dq0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+        dq, (dk_chunks, dv_chunks) = jax.lax.scan(chunk, dq0,
+                                                  jnp.arange(nk))
+        dk = jnp.moveaxis(dk_chunks, 0, 2).reshape(B, KV, Sk, D)
+        dv = jnp.moveaxis(dv_chunks, 0, 2).reshape(B, KV, Sk, D)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def flash_attention_vjp(q, k, v, causal=True, window=0, logit_softcap=0.0,
+                        scale=None, block_k: int = 512):
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    fn = _make_flash_vjp(bool(causal), int(window), float(logit_softcap),
+                         float(scale), int(block_k))
+    return fn(q, k, v)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: int = 0,
+              logit_softcap: float = 0.0, scale: Optional[float] = None,
+              impl: str = "auto") -> jnp.ndarray:
+    """Multi-head GQA attention.  q: [B,H,S,D]; k,v: [B,KV,S,D]."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               logit_softcap=logit_softcap, scale=scale)
+    if impl == "pallas_interpret":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               logit_softcap=logit_softcap, scale=scale,
+                               block_q=min(128, q.shape[2]),
+                               block_k=min(128, k.shape[2]), interpret=True)
+    if impl == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 logit_softcap=logit_softcap, scale=scale)
+    return flash_attention_vjp(q, k, v, causal=causal, window=window,
+                               logit_softcap=logit_softcap, scale=scale)
+
+
+def quantize_kv(x: jnp.ndarray):
+    """Per-(batch, head, position) symmetric int8 quantization of a KV
+    entry [..., D] -> (int8 payload, f32 scale[..., 1]).  Halves the decode
+    cache HBM stream and footprint vs bf16 (§Perf, Cell A iteration 4)."""
+    xf = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True),
+                    1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray,
+                     window: int = 0, logit_softcap: float = 0.0,
+                     scale: Optional[float] = None,
+                     k_scale: Optional[jnp.ndarray] = None,
+                     v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Single-token decode vs. a KV cache.
+
+    q: [B, H, 1, D]; caches: [B, KV, Smax, D]; cache_len: [] current length
+    (the new token's K/V must already be written at cache_len - 1).
+    With k_scale/v_scale the caches are int8 payloads dequantized on the
+    fly (per-position scales [B, KV, Smax, 1])."""
+    B, H, _, D = q.shape
+    KV, Smax = k_cache.shape[1], k_cache.shape[2]
+    qpk = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    # GQA-aware: fold the q-head groups into a batched einsum against the
+    # *unreplicated* cache — the cache (the dominant HBM stream in decode)
+    # is read once, not q_per_kv times, and stays bf16 on the wire with f32
+    # accumulation (preferred_element_type).
+    # explicit per-layer-slice f32 casts: XLA CPU has no native bf16 dot and
+    # would otherwise hoist an f32 copy of the WHOLE cache into the scan
+    # carry (2x cache HBM); casting the slice keeps the conversion local
+    # (free on TPU where the MXU consumes bf16 directly)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, KV, qpk, D)
+    kf = k_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)
+    s = jnp.einsum("bgqd,bgkd->bgqk", qg, kf)
+    if logit_softcap > 0:
+        s = jnp.tanh(s / logit_softcap) * logit_softcap
+    kpos = jnp.arange(Smax)
+    mask = kpos[None, None, None, :] < cache_len
+    win = jnp.asarray(window)          # may be traced (per-layer windows)
+    mask &= jnp.where(win > 0, kpos[None, None, None, :] >= cache_len - win,
+                      True)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    vf = v_cache.astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale.astype(jnp.float32)
+    o = jnp.einsum("bgqk,bgkd->bgqd", p, vf)
+    return o.reshape(B, H, 1, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba2)
+# ---------------------------------------------------------------------------
+
+def ssd(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+        b: jnp.ndarray, c: jnp.ndarray, chunk: int = 128,
+        impl: str = "auto"):
+    """Chunked SSD forward.
+
+    x: [B,S,H,P]; dt: [B,S,H] (positive); a_log: [H]; b,c: [B,S,N] (G=1).
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    NC = S // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                   # [H]
+    dtf = dt.astype(jnp.float32)
+    ad = dtf * a[None, None, :]                               # [B,S,H]
+
+    # chunked layouts
+    x_c = x.reshape(B, NC, chunk, H, P)
+    dt_c = dtf.reshape(B, NC, chunk, H)
+    ad_c = ad.reshape(B, NC, chunk, H)
+    b_c = b.reshape(B, NC, chunk, N).astype(jnp.float32)
+    c_c = c.reshape(B, NC, chunk, N).astype(jnp.float32)
+    acum = jnp.cumsum(ad_c, axis=2)                           # [B,NC,Lc,H]
+    a_end = acum[:, :, -1]                                    # [B,NC,H]
+
+    # per-chunk state contributions: sum_j exp(a_end - acum_j) dt_j x_j b_j^T
+    w = jnp.exp(a_end[:, :, None] - acum) * dt_c              # [B,NC,Lc,H]
+    states = jnp.einsum("bclh,bclhp,bcln->bchpn",
+                        w, x_c.astype(jnp.float32), b_c)      # [B,NC,H,P,N]
+
+    # inter-chunk recurrence (sequential over NC, cheap)
+    def step(h, inp):
+        s_prev, dec = inp
+        h = h * dec[..., None, None] + s_prev
+        return h, h
+
+    decay_chunk = jnp.exp(a_end)                              # [B,NC,H]
+    s_shift = jnp.concatenate(
+        [jnp.zeros_like(states[:, :1]), states[:, :-1]], axis=1)
+    _, h0 = jax.lax.scan(
+        step, jnp.zeros((B, H, P, N), jnp.float32),
+        (jnp.moveaxis(s_shift, 1, 0), jnp.moveaxis(decay_chunk, 1, 0)))
+    h0 = jnp.moveaxis(h0, 0, 1)                               # [B,NC,H,P,N]
+    final_state = h0[:, -1] * decay_chunk[:, -1][..., None, None] \
+        + states[:, -1]
+
+    # inter-chunk output term
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                         c_c, h0, jnp.exp(acum))
+
+    # intra-chunk quadratic term: Pallas kernel on TPU, jnp otherwise
+    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
+    if use_kernel or impl == "pallas_interpret":
+        xk = jnp.moveaxis(x_c, 3, 1)                          # [B,H,NC,Lc,P]
+        dtk = jnp.moveaxis(dt_c, 3, 1)
+        acumk = jnp.moveaxis(acum, 3, 1)
+        y_intra = ssd_intra_chunk(xk, dtk, acumk, b_c, c_c,
+                                  interpret=impl == "pallas_interpret")
+        y_intra = jnp.moveaxis(y_intra, 1, 3)                 # [B,NC,Lc,H,P]
+    else:
+        li = jnp.arange(chunk)
+        tri = li[:, None] >= li[None, :]
+        scores = jnp.einsum("bcln,bcmn->bclm", c_c, b_c)
+        decay = jnp.exp(acum[:, :, :, None, :] - acum[:, :, None, :, :])
+        scores = scores[..., None] * decay * dt_c[:, :, None]  # [B,NC,l,m,H]
+        scores = jnp.where(tri[None, None, :, :, None], scores, 0.0)
+        y_intra = jnp.einsum("bclmh,bcmhp->bclhp", scores,
+                             x_c.astype(jnp.float32))
+
+    y = (y_inter + y_intra).reshape(B, S, H, P).astype(x.dtype)
+    return y, final_state
+
+
+ssd_decode = ref.ssd_decode_ref

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth for the interpret-mode kernel tests and the
+small-shape CPU fallbacks.  Naive O(S^2) attention / O(S) sequential SSM —
+clarity over efficiency.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: int = 0,
+                  logit_softcap: float = 0.0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """Naive attention oracle.
+
+    q: [B, H, Sq, D]; k, v: [B, KV, Sk, D] with H a multiple of KV (GQA).
+    window > 0: local (sliding-window) attention of that width.
+    """
+    B, H, Sq, D = q.shape
+    KV = k.shape[1]
+    qpk = H // KV
+    k = jnp.repeat(k, qpk, axis=1)
+    v = jnp.repeat(v, qpk, axis=1)
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = softcap(logits, logit_softcap)
+    Sk = k.shape[2]
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)     # right-aligned (decode)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+            b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Sequential state-space-duality (Mamba2) oracle.
+
+    x:  [B, S, H, P]   per-head inputs
+    dt: [B, S, H]      softplus'd step sizes (positive)
+    a_log: [H]         per-head decay (A = -exp(a_log) < 0)
+    b, c: [B, S, N]    shared-across-heads (G=1) input/output projections
+    returns y: [B, S, H, P]
+    """
+    Bsz, S, H, P = x.shape
+    N = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # [H]
+    dt = dt.astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, None, :])                  # [B,S,H]
+
+    def step(h, inputs):
+        xt, dtt, dect, bt, ct = inputs
+        # h: [B,H,P,N]
+        h = h * dect[..., None, None] + \
+            (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0), jnp.moveaxis(decay, 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def ssd_decode_ref(h: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                   a_log: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray):
+    """One SSD decode step.  h: [B,H,P,N]; x: [B,H,P]; dt: [B,H];
+    b, c: [B,N].  Returns (h', y [B,H,P])."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * a[None, :])
+    h = h * decay[..., None, None] + \
+        (dt[..., None] * x.astype(jnp.float32))[..., None] \
+        * b[:, None, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bn->bhp", h, c.astype(jnp.float32))
+    return h, y.astype(x.dtype)

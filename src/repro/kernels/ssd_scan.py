@@ -1,0 +1,69 @@
+"""Mamba2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+TPU adaptation: the SSD decomposition splits the sequence into chunks; the
+intra-chunk term is a decay-masked attention-like matmul chain (MXU-friendly,
+the compute hot spot) and the inter-chunk term is a cheap associative scan
+over per-chunk states.  The Pallas kernel below computes the intra-chunk
+quadratic term per (batch, head, chunk) with VMEM-resident blocks; the
+inter-chunk recurrence stays in jnp (``ops.ssd``).
+
+Validated against ``ref.ssd_ref`` with ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_intra_kernel(x_ref, dt_ref, acum_ref, b_ref, c_ref, y_ref, *,
+                      chunk: int):
+    x = x_ref[0, 0, 0].astype(jnp.float32)        # [Lc, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)      # [Lc]
+    acum = acum_ref[0, 0, 0].astype(jnp.float32)  # [Lc]
+    b = b_ref[0, 0].astype(jnp.float32)           # [Lc, N]
+    c = c_ref[0, 0].astype(jnp.float32)           # [Lc, N]
+
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))  # [Lc, Lc]
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(acum[:, None] - acum[None, :])
+    scores = scores * decay * dt[None, :]
+    scores = jnp.where(li >= mi, scores, 0.0)
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())))
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x: jnp.ndarray, dt: jnp.ndarray, acum: jnp.ndarray,
+                    b: jnp.ndarray, c: jnp.ndarray,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Intra-chunk SSD term.
+
+    x:    [B, H, NC, Lc, P]
+    dt:   [B, H, NC, Lc]       (positive step sizes)
+    acum: [B, H, NC, Lc]       (within-chunk cumsum of dt * A)
+    b,c:  [B, NC, Lc, N]       (G=1: shared across heads)
+    returns y_intra: [B, H, NC, Lc, P]
+    """
+    B, H, NC, Lc, P = x.shape
+    N = b.shape[-1]
+    grid = (B, H, NC)
+    kernel = functools.partial(_ssd_intra_kernel, chunk=Lc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Lc, P), lambda i, j, k: (i, j, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Lc), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, 1, Lc), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, Lc, N), lambda i, j, k: (i, k, 0, 0)),
+            pl.BlockSpec((1, 1, Lc, N), lambda i, j, k: (i, k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Lc, P),
+                               lambda i, j, k: (i, j, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, dt, acum, b, c)

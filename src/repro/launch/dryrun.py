@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell with ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis / cost_analysis, and derive roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod        # 512 chips
+  PYTHONPATH=src python -m repro.launch.dryrun --out results.json
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import SHAPES, get_config, list_archs, shape_applicable
+from ..core.autoshard import plan_sharding
+from ..models.api import build_model
+from ..optim.optimizers import make_optimizer
+from .hlo_cost import analyze_hlo
+from .mesh import make_production_mesh
+from .roofline import HEADER, analyze, model_flops_for
+from .steps import (build_prefill_step, build_serve_step, build_train_step,
+                    input_structs)
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               verbose: bool = True, kv_int8: bool = False,
+               ) -> Dict[str, Any]:
+    """Lower + compile one (arch x shape x mesh) cell; return its record."""
+    cfg = get_config(arch)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    shape = SHAPES[shape_name]
+    if shape.mode == "train" and cfg.remat == "none":
+        # activation checkpointing is mandatory at these batch x depth
+        # scales (non-remat residuals exceed HBM; see DESIGN.md)
+        cfg = dataclasses.replace(cfg, remat="block")
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = math.prod(mesh.devices.shape)
+    t0 = time.perf_counter()
+    api = build_model(cfg, mesh=mesh)
+
+    key = jax.random.PRNGKey(0)
+    param_sds = jax.eval_shape(api.init, key)
+
+    record: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                              "mesh": mesh_name, "mode": shape.mode}
+    with mesh:
+        if shape.mode == "train":
+            optimizer = make_optimizer(cfg.optimizer)
+            opt_sds = jax.eval_shape(optimizer.init, param_sds)
+            plan = plan_sharding(cfg, shape, mesh, param_sds, opt_sds)
+            batch_sds = input_structs(cfg, shape)
+            step = build_train_step(api, optimizer)
+            jstep = jax.jit(
+                step,
+                in_shardings=(_shardings(mesh, plan.param_specs),
+                              _shardings(mesh, plan.opt_specs),
+                              _shardings(mesh, plan.batch_specs)),
+                out_shardings=(_shardings(mesh, plan.param_specs),
+                               _shardings(mesh, plan.opt_specs), None),
+                donate_argnums=(0, 1))
+            lowered = jstep.lower(param_sds, opt_sds, batch_sds)
+        elif shape.mode == "prefill":
+            opt_sds = jax.tree_util.tree_map(lambda x: x, {})
+            cache_sds = jax.eval_shape(
+                lambda: api.init_cache(shape.global_batch, shape.seq_len))
+            plan = plan_sharding(cfg, shape, mesh, param_sds, {},
+                                 cache_shapes=cache_sds)
+            batch_sds = input_structs(cfg, shape)
+            step = build_prefill_step(api, shape.seq_len)
+            jstep = jax.jit(
+                step,
+                in_shardings=(_shardings(mesh, plan.param_specs),
+                              _shardings(mesh,
+                                         plan.batch_specs["inputs"])),
+                out_shardings=(None, _shardings(mesh, plan.cache_specs)))
+            lowered = jstep.lower(param_sds, batch_sds["inputs"])
+        else:                                  # decode
+            cache_sds = jax.eval_shape(
+                lambda: api.init_cache(shape.global_batch, shape.seq_len))
+            plan = plan_sharding(cfg, shape, mesh, param_sds, {},
+                                 cache_shapes=cache_sds)
+            ins = input_structs(cfg, shape)
+            step = build_serve_step(api)
+            jstep = jax.jit(
+                step,
+                in_shardings=(_shardings(mesh, plan.param_specs),
+                              _shardings(mesh, plan.cache_specs), None,
+                              None),
+                out_shardings=(None, _shardings(mesh, plan.cache_specs)),
+                donate_argnums=(1,))
+            lowered = jstep.lower(param_sds, cache_sds, ins["tokens"],
+                                  ins["cache_len"])
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # while-loop-aware FLOP/byte/collective accounting (XLA's own
+    # cost_analysis counts scan bodies once — see hlo_cost.py)
+    hc = analyze_hlo(hlo)
+    cost = {"flops": hc.flops, "bytes accessed": hc.bytes}
+    rep = analyze(arch, shape_name, mesh_name, chips, cost, hlo,
+                  model_flops_for(cfg, shape), mem_stats=mem,
+                  coll=(hc.coll_bytes, hc.coll_by_kind))
+    record["xla_cost_analysis"] = {
+        "flops_scan_body_once": xla_cost.get("flops"),
+        "bytes_scan_body_once": xla_cost.get("bytes accessed")}
+    record.update({
+        "status": "ok",
+        "compile_seconds": round(time.perf_counter() - t0, 1),
+        "plan": {"zero": plan.zero_opt, "attn_sharded": plan.attn_sharded,
+                 "hbm_gb": round(plan.hbm_gb_per_chip, 2),
+                 "notes": plan.notes},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+        "roofline": {
+            "flops_per_device": rep.flops_per_device,
+            "bytes_per_device": rep.bytes_per_device,
+            "collective_bytes_per_device": rep.collective_bytes_per_device,
+            "coll_by_kind": rep.coll_by_kind,
+            "t_compute": rep.t_compute,
+            "t_memory": rep.t_memory,
+            "t_collective": rep.t_collective,
+            "bottleneck": rep.bottleneck,
+            "model_flops": rep.model_flops,
+            "useful_ratio": rep.hlo_useful_ratio,
+            "roofline_fraction": rep.roofline_fraction,
+        },
+    })
+    if verbose:
+        print(f"  memory_analysis: args="
+              f"{record['memory']['argument_bytes'] / 2**30:.2f}GiB "
+              f"temp={record['memory']['temp_bytes'] / 2**30:.2f}GiB "
+              f"per device")
+        print(f"  cost_analysis: flops/dev={rep.flops_per_device:.3e} "
+              f"bytes/dev={rep.bytes_per_device:.3e} "
+              f"coll/dev={rep.collective_bytes_per_device:.3e}")
+        print("  " + rep.row())
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 (512-chip) mesh")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="quantized int8 decode KV cache (perf variant)")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    failures = 0
+    print(HEADER)
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                print(f"== {tag}", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp,
+                                     kv_int8=args.kv_int8)
+                except Exception as e:  # a failure here is a sharding bug
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "FAILED", "error": repr(e)}
+                    failures += 1
+                if rec.get("status") == "skipped":
+                    print(f"  skipped: {rec['reason']}")
+                records.append(rec)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    print(f"{len(records)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,408 @@
+"""While-loop-aware FLOP/byte counting over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, regardless
+of trip count — useless for scan-over-layers models (a 48-layer stack reports
+1-layer FLOPs).  This module parses the partitioned HLO module, builds the
+computation call graph, extracts loop trip counts from the canonical scan
+pattern (induction variable compared against a constant), and accumulates:
+
+  * dot FLOPs: 2 x prod(result dims) x prod(contracting dims)
+  * elementwise/fusion output elements (1 flop/elem, minor term)
+  * bytes: operands + results of dots, fusions, and memory-moving ops
+
+multiplied through nested while loops.  Used by the dry-run for roofline
+terms; validated in tests against unrolled-vs-scanned small models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^(?:\([^)]*\)|[\w\[\],{}<>= ]+?)\s*([a-z][\w\-]*)\(")
+
+
+def _dims(dim_str: str) -> List[int]:
+    return [int(d) for d in dim_str.split(",")] if dim_str else []
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return m.group(1), _dims(m.group(2))
+
+
+def _all_shapes(text: str):
+    for dt, dims in _SHAPE_RE.findall(text):
+        yield dt, _dims(dims)
+
+
+def _numel(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _bytes(text: str) -> float:
+    return sum(_numel(d) * _DTYPE_BYTES[t] for t, d in _all_shapes(text))
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[str]] = {}
+        # per-computation symbol table: var -> shape text (for byte/dim calc)
+        self.symbols: Dict[str, Dict[str, str]] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[str, CompCost] = {}
+
+    # ---- parsing ---------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            stripped = line.strip()
+            if not line.startswith((" ", "\t")) and ("->" in line) \
+                    and line.rstrip().endswith("{") \
+                    and not stripped.startswith("//"):
+                m = _COMP_START.match(stripped.lstrip("%"))
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    self.symbols[cur] = {}
+                    # parameter shapes live in the header
+                    header = stripped[stripped.find("(") + 1:
+                                      stripped.rfind("->")]
+                    for pm in _PARAM_RE.finditer(header):
+                        self.symbols[cur][pm.group(1)] = pm.group(2)
+                    continue
+            if cur is not None and stripped.startswith(("%", "ROOT")):
+                self.computations[cur].append(stripped)
+                dm = _DEF_RE.match(stripped)
+                if dm and "=" in stripped:
+                    rhs = stripped.split("=", 1)[1]
+                    # result type = text before the opcode's '('
+                    self.symbols[cur][dm.group(1)] = rhs.split("(", 1)[0]
+
+    def _operand_bytes(self, comp: str, body: str) -> float:
+        """Sum shape bytes of %operands referenced inside op parentheses."""
+        if "(" not in body:
+            return 0.0
+        inner = body[body.find("(") + 1:]
+        # cut trailing attribute list (after the matching close is hard;
+        # attributes contain no %refs with shapes, so scanning all is fine)
+        total = 0.0
+        table = self.symbols.get(comp, {})
+        for m in _OPERAND_RE.finditer(inner):
+            t = table.get(m.group(1))
+            if t:
+                total += _bytes(t)
+        return total
+
+    def _operand_shape(self, comp: str, body: str, index: int):
+        """Shape of the index-th %operand of an op."""
+        inner = body[body.find("(") + 1:]
+        refs = _OPERAND_RE.findall(inner.split("),", 1)[0].split("), ")[0])
+        if index >= len(refs):
+            refs = _OPERAND_RE.findall(inner)
+        if index < len(refs):
+            t = self.symbols.get(comp, {}).get(refs[index])
+            if t:
+                return _first_shape(t)
+        return None
+
+    def root_is_inplace_dus(self, name: str) -> bool:
+        """True when the computation's root is a dynamic-update-slice (or a
+        convert of one): XLA aliases the target buffer, so the fusion's real
+        traffic is the updated slice, not the full result."""
+        lines = self.computations.get(name, [])
+        if not lines:
+            return False
+        root = lines[-1]
+        for l in lines:
+            if l.startswith("ROOT"):
+                root = l
+        body = root.split("=", 1)[-1]
+        if "dynamic-update-slice(" in body:
+            return True
+        if " convert(" in body or body.strip().startswith("convert("):
+            ref = _OPERAND_RE.search(body[body.find("("):])
+            if ref:
+                src = next((l for l in lines
+                            if _DEF_RE.match(l)
+                            and _DEF_RE.match(l).group(1) == ref.group(1)),
+                           "")
+                return "dynamic-update-slice(" in src
+        return False
+
+    def is_layout_fusion(self, name: str) -> bool:
+        """A fusion containing only dtype/layout ops (convert, bitcast,
+        copy, transpose, reshape, broadcast of scalars) — an XLA CPU
+        bf16-emulation artifact with no TPU analogue."""
+        layout_ops = ("convert(", "bitcast(", "copy(", "transpose(",
+                      "reshape(", "parameter(", "constant(")
+        lines = self.computations.get(name, [])
+        if not lines:
+            return False
+        for l in lines:
+            body = l.split("=", 1)[-1]
+            if not any(op in body for op in layout_ops):
+                return False
+        return True
+
+    def _uses_only_slicing(self, name: str, var: str, depth: int = 0,
+                           ) -> bool:
+        """All uses of ``var`` are slicing ops (allowing one level of
+        convert/bitcast indirection, XLA CPU's in-place-DUS pattern)."""
+        slice_ops = ("dynamic-slice(", "slice(", "gather(",
+                     "dynamic-update-slice(", "get-tuple-element(",
+                     "bitcast(")
+        uses = [l for l in self.computations.get(name, [])
+                if f"%{var}," in l.split("=", 1)[-1]
+                or f"%{var})" in l.split("=", 1)[-1]]
+        if not uses:
+            return False
+        for u in uses:
+            body = u.split("=", 1)[-1]
+            if any(op in body for op in slice_ops):
+                continue
+            if depth < 2 and (" convert(" in body or " copy(" in body
+                              or " bitcast(" in body):
+                dm = _DEF_RE.match(u)
+                if dm and self._uses_only_slicing(name, dm.group(1),
+                                                  depth + 1):
+                    continue
+            return False
+        return True
+
+    # ---- trip-count extraction -------------------------------------------
+    def trip_count(self, cond_name: str) -> int:
+        """Canonical scan pattern: compare(iter, constant(N)), LT."""
+        best = 1
+        for line in self.computations.get(cond_name, []):
+            m = re.search(r"constant\((\d+)\)", line)
+            if m:
+                best = max(best, int(m.group(1)))
+        return best
+
+    # ---- per-op costs ------------------------------------------------------
+    def _dot_flops(self, comp: str, line: str) -> float:
+        body = line.split("=", 1)[1]
+        res = _first_shape(body.split("(", 1)[0])
+        if res is None:
+            return 0.0
+        _, res_dims = res
+        lhs = self._operand_shape(comp, body, 0)
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        contract = 1
+        if lhs and cm and cm.group(1):
+            _, lhs_dims = lhs
+            for idx in _dims(cm.group(1)):
+                if idx < len(lhs_dims):
+                    contract *= lhs_dims[idx]
+        return 2.0 * _numel(res_dims) * contract
+
+    def comp_cost(self, name: str, fused: bool = False) -> CompCost:
+        key = (name, fused)
+        if key in self._memo:
+            return self._memo[key]
+        total = CompCost()
+        self._memo[key] = total            # guard recursion
+        slice_ops = ("dynamic-slice", "slice", "gather",
+                     "dynamic-update-slice", "get-tuple-element", "bitcast")
+        for line in self.computations.get(name, []):
+            rhs = line.split("=", 1)
+            if len(rhs) != 2:
+                continue
+            body = rhs[1].strip()
+            opm = _OPCODE_RE.match(body)
+            opcode = opm.group(1) if opm else ""
+            if opcode == "dot":
+                total.flops += self._dot_flops(name, line)
+                total.bytes += _bytes(body.split("(", 1)[0]) \
+                    + self._operand_bytes(name, body)
+            elif opcode == "while":
+                b = _BODY_RE.search(line)
+                c = _COND_RE.search(line)
+                if b:
+                    tm = _TRIP_RE.search(line)   # XLA's own trip count
+                    if tm:
+                        trips = int(tm.group(1))
+                    else:
+                        trips = self.trip_count(c.group(1)) if c else 1
+                    sub = self.comp_cost(b.group(1))
+                    total.flops += sub.flops * trips
+                    total.bytes += sub.bytes * trips
+                    total.coll_bytes += sub.coll_bytes * trips
+                    for k, v in sub.coll_by_kind.items():
+                        total.coll_by_kind[k] = \
+                            total.coll_by_kind.get(k, 0) + v * trips
+            elif opcode in ("fusion", "call", "conditional", "map",
+                            "async-start"):
+                sub_flops = sub_bytes = 0.0
+                for cm in _CALLS_RE.finditer(line):
+                    sub = self.comp_cost(cm.group(1), fused=True)
+                    sub_flops += sub.flops
+                    sub_bytes += sub.bytes
+                    total.coll_bytes += sub.coll_bytes
+                    for k, v in sub.coll_by_kind.items():
+                        total.coll_by_kind[k] = \
+                            total.coll_by_kind.get(k, 0) + v
+                total.flops += sub_flops
+                # fused kernels: internal per-op accounting (slice rules
+                # included) + one result write — except in-place DUS roots,
+                # whose result aliases an input buffer (slice-only traffic)
+                callee_names = [cm.group(1)
+                                for cm in _CALLS_RE.finditer(line)]
+                inplace = any(self.root_is_inplace_dus(cn)
+                              for cn in callee_names)
+                if not inplace and all(self.is_layout_fusion(cn)
+                                       for cn in callee_names):
+                    # pure convert/layout fusion: XLA CPU materializes an
+                    # f32 copy because it has no native bf16 dot; a TPU
+                    # consumes the bf16 operand directly.  Charge the
+                    # narrow side once.
+                    res_b = _bytes(body.split("(", 1)[0])
+                    op_b = self._operand_bytes(name, body)
+                    total.bytes += min(res_b, op_b if op_b else res_b)
+                else:
+                    total.bytes += sub_bytes + \
+                        (0.0 if inplace else _bytes(body.split("(", 1)[0]))
+            elif any(body.startswith(c) or f" {c}(" in body
+                     for c in _COLLECTIVES):
+                if "-done(" in body:
+                    continue
+                kind = next(c for c in _COLLECTIVES
+                            if body.startswith(c) or f" {c}(" in body)
+                res = line.split("=", 1)[0] + "=" + \
+                    body.split("(", 1)[0]
+                b = _bytes(res)
+                total.coll_bytes += b
+                total.coll_by_kind[kind] = \
+                    total.coll_by_kind.get(kind, 0) + b
+                total.bytes += b
+            elif opcode in ("convolution",):
+                # conv flops ~ 2 x out elems x (window x in-ch); approximate
+                # via shapes: result x contracted window product
+                res = _first_shape(body)
+                if res:
+                    total.flops += 2.0 * _numel(res[1])
+                total.bytes += _bytes(line)
+            elif opcode in ("get-tuple-element", "tuple", "bitcast",
+                            "parameter", "constant", "after-all",
+                            "partition-id", "replica-id", "custom-call",
+                            "rng-bit-generator"):
+                pass                                # no real data movement
+            elif opcode in ("dynamic-slice", "slice", "gather"):
+                # touches only the sliced window, not the source buffer
+                total.bytes += 2.0 * _bytes(body.split("(", 1)[0])
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                # in-place update: read+write of the update operand only
+                upd = self._operand_shape(name, body, 1)
+                if upd is not None:
+                    total.bytes += 2.0 * _numel(upd[1]) \
+                        * _DTYPE_BYTES.get(upd[0], 4)
+                else:
+                    total.bytes += _bytes(body.split("(", 1)[0])
+            elif opcode in ("copy", "transpose", "reshape", "convert",
+                            "broadcast", "iota", "pad", "reverse",
+                            "concatenate"):
+                if not fused:     # inside a fusion these are free streaming
+                    total.bytes += 2.0 * _bytes(body.split("(", 1)[0])
+            elif opcode in ("reduce", "sort", "reduce-window",
+                            "exponential", "tanh", "add", "multiply",
+                            "subtract", "divide", "maximum", "minimum",
+                            "select", "compare", "rsqrt", "negate", "log",
+                            "and", "or", "xor", "clamp", "power", "sign",
+                            "floor", "ceil", "abs", "cosine", "sine",
+                            "logistic", "sqrt", "atan2", "remainder",
+                            "shift-left", "shift-right-logical",
+                            "shift-right-arithmetic", "is-finite", "not",
+                            "expm1", "log1p", "cbrt", "round-nearest-afz",
+                            "round-nearest-even", "popcnt", "clz"):
+                res = _first_shape(body.split("(", 1)[0])
+                if res:
+                    total.flops += _numel(res[1])   # ~1 flop/elem
+                if not fused:
+                    total.bytes += _bytes(body.split("(", 1)[0]) \
+                        + self._operand_bytes(name, body)
+        if fused:
+            # a fused kernel streams each parameter once (params consumed
+            # only through slicing ops are already counted by slice rules)
+            body_text = "\n".join(self.computations.get(name, []))
+            for line in self.computations.get(name, []):
+                if "parameter(" not in line:
+                    continue
+                dm = _DEF_RE.match(line)
+                if not dm:
+                    continue
+                pname = dm.group(1)
+                if not self._uses_only_slicing(name, pname):
+                    total.bytes += _bytes(line.split("=", 1)[1]
+                                          .split("(", 1)[0])
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> CompCost:
+        # the ENTRY computation is the last one parsed with "ENTRY" in HLO;
+        # we detect it as the computation no one calls
+        called = set()
+        for name, lines in self.computations.items():
+            for line in lines:
+                for m in _CALLS_RE.finditer(line):
+                    called.add(m.group(1))
+                for m in _BODY_RE.finditer(line):
+                    called.add(m.group(1))
+                for m in _COND_RE.finditer(line):
+                    called.add(m.group(1))
+        roots = [n for n in self.computations if n not in called]
+        total = CompCost()
+        # prefer an entry-like root (jit_* / main); else sum all roots
+        mains = [n for n in roots if "main" in n or n.startswith("jit")]
+        for n in (mains or roots):
+            c = self.comp_cost(n)
+            total.flops += c.flops
+            total.bytes += c.bytes
+            total.coll_bytes += c.coll_bytes
+            for k, v in c.coll_by_kind.items():
+                total.coll_by_kind[k] = total.coll_by_kind.get(k, 0) + v
+        return total
+
+
+def analyze_hlo(hlo_text: str) -> CompCost:
+    return HloCostModel(hlo_text).entry_cost()

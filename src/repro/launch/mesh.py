@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state; meshes are built
+lazily inside the function (the dry-run sets XLA_FLAGS before any import).
+"""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; the multi-pod mesh adds a leading 'pod' axis of
+    2 (512 chips).  Uses the first `prod(shape)` available devices."""
+    import math
+
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)}; the dry-run must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    return jax.make_mesh(
+        shape, axes, devices=devs[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(axes=("data", "model")):
+    """A 1x1 mesh over the single local device (smoke tests)."""
+    import jax
+    return jax.make_mesh(
+        (1,) * len(axes), axes, devices=jax.devices()[:1],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,52 @@
+"""Step builders shared by train.py, serve.py and dryrun.py."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.api import ModelAPI
+from ..optim.optimizers import Optimizer, global_norm
+
+
+def build_train_step(api: ModelAPI, optimizer: Optimizer):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(api.loss_fn)(params, batch)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads)}
+        return new_params, new_state, metrics
+    return train_step
+
+
+def build_serve_step(api: ModelAPI):
+    def serve_step(params, cache, tokens, cache_len):
+        logits, cache = api.decode_step(params, cache, tokens, cache_len)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+    return serve_step
+
+
+def build_prefill_step(api: ModelAPI, max_len: int):
+    def prefill_step(params, inputs):
+        return api.prefill(params, inputs, max_len)
+    return prefill_step
+
+
+def input_structs(cfg: ModelConfig, shape: ShapeConfig,
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell —
+    weak-type-correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.frontend == "embed":
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch = {"inputs": inputs}
+    if shape.mode == "train":
+        batch["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch

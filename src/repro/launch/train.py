@@ -1,0 +1,139 @@
+"""End-to-end training driver.
+
+Small-scale (CPU, reduced config) it actually trains; at pod scale the same
+code path lowers under the production mesh (dryrun.py proves compilation).
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --tiny \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, ShapeConfig, get_config
+from ..configs.base import ModelConfig
+from ..data.pipeline import DataConfig, Prefetcher, synth_batch
+from ..checkpoint import ckpt
+from ..models.api import build_model
+from ..optim.optimizers import make_optimizer
+from ..runtime.fault import (NodeFailure, RecoveryPolicy, StepHeartbeat,
+                             run_with_recovery)
+from ..runtime.straggler import StragglerDetector
+from .steps import build_train_step
+
+
+def tiny_config(cfg: ModelConfig) -> ModelConfig:
+    over = dict(num_layers=2, d_model=128, d_ff=256, vocab_size=1024,
+                head_dim=32)
+    if cfg.num_heads:
+        over.update(num_heads=4,
+                    num_kv_heads=2 if cfg.num_kv_heads < cfg.num_heads
+                    else 4)
+    if cfg.family == "moe":
+        over.update(num_experts=8, top_k=2, moe_d_ff=64,
+                    num_shared_experts=min(1, cfg.num_shared_experts),
+                    first_dense_layers=min(1, cfg.first_dense_layers))
+    if cfg.family in ("ssm", "hybrid"):
+        over.update(ssm_state=16, ssm_head_dim=32)
+    if cfg.attn_every:
+        over.update(attn_every=1)
+    if cfg.local_window:
+        over.update(local_window=32)
+    return dataclasses.replace(cfg, **over)
+
+
+def train(arch: str, steps: int = 50, batch: int = 8, seq: int = 128,
+          tiny: bool = True, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 25, resume: bool = False,
+          fail_at: Optional[int] = None, log_every: int = 10,
+          seed: int = 0):
+    cfg = get_config(arch)
+    if tiny:
+        cfg = tiny_config(cfg)
+    shape = ShapeConfig(f"train_{seq}", seq, batch, "train")
+    api = build_model(cfg)
+    optimizer = make_optimizer(cfg.optimizer, lr=1e-3)
+
+    key = jax.random.PRNGKey(seed)
+    params = api.init(key)
+    opt_state = optimizer.init(params)
+    start_step = 0
+    if resume and ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+        params, opt_state, manifest = ckpt.restore(ckpt_dir, params,
+                                                   opt_state)
+        start_step = manifest["step"]
+        print(f"resumed from step {start_step}")
+
+    step_fn = jax.jit(build_train_step(api, optimizer), donate_argnums=(0, 1))
+    prefetch = Prefetcher(cfg, shape, DataConfig(seed=seed),
+                          start_step=start_step)
+    detector = StragglerDetector()
+    heartbeat = StepHeartbeat(deadline_seconds=300.0)
+    losses = []
+
+    state = {"params": params, "opt": opt_state, "failed_once": False}
+
+    def restore_fn() -> int:
+        if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+            p, o, m = ckpt.restore(ckpt_dir, state["params"], state["opt"])
+            state["params"], state["opt"] = p, o
+            return m["step"]
+        return start_step
+
+    def one_step(step: int):
+        if fail_at is not None and step == fail_at \
+                and not state["failed_once"]:
+            state["failed_once"] = True        # one-shot injection
+            raise NodeFailure(f"injected failure at step {step}")
+        t0 = time.perf_counter()
+        heartbeat.arm()
+        batch_np = synth_batch(cfg, shape, step, DataConfig(seed=seed))
+        batch_dev = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        state["params"], state["opt"], metrics = step_fn(
+            state["params"], state["opt"], batch_dev)
+        heartbeat.disarm()
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        detector.record("host0", time.perf_counter() - t0)
+        if step % log_every == 0 or step == start_step:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"({time.perf_counter() - t0:.2f}s)", flush=True)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, step + 1, state["params"], state["opt"],
+                      extra={"loss": loss})
+
+    stats = run_with_recovery(one_step, start_step, steps - start_step,
+                              restore_fn,
+                              policy=RecoveryPolicy(backoff_seconds=0.01),
+                              sleep=lambda s: None)
+    prefetch.close()
+    print(f"done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f} "
+          f"(restarts={stats.restarts})")
+    return losses, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+    train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+          tiny=args.tiny, ckpt_dir=args.ckpt_dir, resume=args.resume,
+          fail_at=args.fail_at)
+
+
+if __name__ == "__main__":
+    main()

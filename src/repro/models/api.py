@@ -1,0 +1,511 @@
+"""Unified model API for all 10 assigned architectures.
+
+``build_model(cfg, mesh)`` returns a ``ModelAPI`` with:
+  init(key)                          -> params
+  forward(params, inputs)            -> logits            (train path)
+  prefill(params, inputs, max_len)   -> (logits, cache)   (inference prefill)
+  init_cache(batch, max_len)         -> cache
+  decode_step(params, cache, tok, n) -> (logits, cache)   (one new token)
+  loss_fn(params, batch)             -> scalar loss
+
+All layer stacks use ``jax.lax.scan`` over stacked parameters so the HLO
+stays one-block-sized regardless of depth (essential for compiling 61-layer
+1T-param graphs for 512 devices).  Activation checkpointing (`remat=block`)
+wraps the scan body.  MoE layers run expert-parallel inside ``shard_map``
+(see models/moe.py); everything else is pjit/GSPMD-sharded via autoshard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .attention import attn_decode, attn_forward, init_attn, _project_qkv
+from .common import (chunked_cross_entropy, cross_entropy_loss, dense_init,
+                     rms_norm, split_keys)
+from .moe import init_moe, moe_ffn, shared_expert_ffn
+from .ssm import (init_mamba, mamba_decode, mamba_forward, mamba_init_state,
+                  ssm_dims)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# layer initializers
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, d, f, dtype):
+    ks = split_keys(key, ["wi", "wg", "wo"])
+    return {"wi": dense_init(ks["wi"], (d, f), d, dtype),
+            "wg": dense_init(ks["wg"], (d, f), d, dtype),
+            "wo": dense_init(ks["wo"], (f, d), f, dtype)}
+
+
+def _gated_mlp(p, x):
+    h = (x @ p["wi"]) * jax.nn.silu(x @ p["wg"])
+    return h @ p["wo"]
+
+
+def _init_dense_block(key, cfg: ModelConfig, dtype):
+    ks = split_keys(key, ["attn", "mlp"])
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attn(ks["attn"], cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": _init_mlp(ks["mlp"], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _init_moe_block(key, cfg: ModelConfig, model_axis_size: int, dtype):
+    ks = split_keys(key, ["attn", "moe"])
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attn(ks["attn"], cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "moe": init_moe(ks["moe"], cfg, model_axis_size, dtype)}
+
+
+def _init_mamba_block(key, cfg: ModelConfig, dtype):
+    return {"ln": jnp.zeros((cfg.d_model,), dtype),
+            "mamba": init_mamba(key, cfg, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# ModelAPI
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    prefill: Callable
+    init_cache: Callable
+    decode_step: Callable
+    loss_fn: Callable
+
+
+def build_model(cfg: ModelConfig, mesh=None, dtype=jnp.bfloat16) -> ModelAPI:
+    V = cfg.padded_vocab
+    d = cfg.d_model
+    L = cfg.num_layers
+    mesh_axes = tuple(mesh.axis_names) if mesh is not None else ()
+    model_axis = "model" if "model" in mesh_axes else None
+    model_axis_size = mesh.shape["model"] if model_axis else 1
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    use_shard_map = cfg.family == "moe" and mesh is not None \
+        and model_axis is not None
+
+    paired = cfg.local_window > 0          # gemma2: (local, global) pairs
+    if paired:
+        assert L % 2 == 0, "local/global alternation needs even depth"
+
+    def _seq_shard(h):
+        """Megatron-SP-style residual sharding: between blocks the hidden
+        state lives sequence-sharded over 'model' (and batch over data), so
+        remat-saved residuals shrink by the TP degree.  GSPMD inserts the
+        gather/scatter around attention automatically."""
+        if not cfg.seq_shard or mesh is None or model_axis is None:
+            return h
+        from jax.sharding import NamedSharding
+        dp = data_axes if len(data_axes) > 1 else \
+            (data_axes[0] if data_axes else None)
+        if h.ndim == 3 and h.shape[1] % model_axis_size == 0:
+            return jax.lax.with_sharding_constraint(
+                h, NamedSharding(mesh, P(dp, "model", None)))
+        return h
+
+    # ---- init ---------------------------------------------------------------
+    def init(key: jax.Array) -> PyTree:
+        ks = split_keys(key, ["embed", "head", "blocks", "extra"])
+        params: Dict[str, PyTree] = {
+            "embed": dense_init(ks["embed"], (V, d), d, dtype),
+            "final_norm": jnp.zeros((d,), dtype),
+            "lm_head": dense_init(ks["head"], (d, V), d, dtype),
+        }
+        if cfg.family == "dense":
+            keys = jax.random.split(ks["blocks"], L)
+            params["blocks"] = jax.vmap(
+                lambda k: _init_dense_block(k, cfg, dtype))(keys)
+        elif cfg.family == "moe":
+            fd = cfg.first_dense_layers
+            if fd:
+                dkeys = jax.random.split(ks["extra"], fd)
+                params["dense_blocks"] = jax.vmap(
+                    lambda k: _init_dense_block(k, cfg, dtype))(dkeys)
+            keys = jax.random.split(ks["blocks"], L - fd)
+            params["blocks"] = jax.vmap(
+                lambda k: _init_moe_block(k, cfg, model_axis_size, dtype)
+            )(keys)
+        elif cfg.family == "ssm":
+            keys = jax.random.split(ks["blocks"], L)
+            params["blocks"] = jax.vmap(
+                lambda k: _init_mamba_block(k, cfg, dtype))(keys)
+        elif cfg.family == "hybrid":
+            keys = jax.random.split(ks["blocks"], L)
+            params["blocks"] = jax.vmap(
+                lambda k: _init_mamba_block(k, cfg, dtype))(keys)
+            params["shared"] = _init_dense_block(ks["extra"], cfg, dtype)
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    # ---- helpers --------------------------------------------------------
+    def _embed(params, inputs):
+        if inputs.dtype in (jnp.int32, jnp.int64):
+            h = params["embed"][inputs]          # row gather, no collective
+        else:
+            h = inputs.astype(dtype)             # precomputed embeddings stub
+        return h * jnp.asarray(d ** 0.5, dtype)
+
+    def _logits(params, h):
+        logits = h.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+        if cfg.final_logit_softcap > 0:
+            cap = cfg.final_logit_softcap
+            logits = jnp.tanh(logits / cap) * cap
+        return logits
+
+    def _routed_moe(bp_moe, x):
+        routed_p = {k: v for k, v in bp_moe.items() if k != "shared"}
+        if use_shard_map:
+            from jax.experimental.shard_map import shard_map
+            pspecs = {"router": P(), "wi": P("model", None, None),
+                      "wg": P("model", None, None),
+                      "wo": P("model", None, None)}
+            x_spec = P(data_axes if data_axes else None, None, None)
+            fn = shard_map(
+                functools.partial(moe_ffn, cfg=cfg, model_axis=model_axis),
+                mesh=mesh, in_specs=(pspecs, x_spec), out_specs=x_spec,
+                check_rep=False)
+            return fn(routed_p, x)
+        return moe_ffn(routed_p, x, cfg=cfg, model_axis=None)
+
+    def _dense_block_fwd(bp, h, window, collect_kv=False):
+        a_in = rms_norm(h, bp["ln1"])
+        if collect_kv:
+            B, S, _ = a_in.shape
+            q, k, v = _project_qkv(bp["attn"], a_in, cfg, jnp.arange(S))
+            from ..kernels import ops
+            o = ops.attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                              jnp.swapaxes(v, 1, 2), causal=True,
+                              window=window,
+                              logit_softcap=cfg.attn_logit_softcap)
+            o = jnp.swapaxes(o, 1, 2).reshape(B, S, -1)
+            attn_out = o @ bp["attn"]["wo"]
+            kv = (jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2))
+        else:
+            attn_out = attn_forward(bp["attn"], a_in, cfg, window=window)
+            kv = None
+        h = h + attn_out
+        f_in = rms_norm(h, bp["ln2"])
+        if "mlp" in bp:
+            ffn = _gated_mlp(bp["mlp"], f_in)
+        else:
+            ffn = _routed_moe(bp["moe"], f_in)
+            if "shared" in bp["moe"]:
+                ffn = ffn + shared_expert_ffn(bp["moe"], f_in)
+        return h + ffn, kv
+
+    def _mamba_block_fwd(bp, h):
+        return h + mamba_forward(bp["mamba"], rms_norm(h, bp["ln"]), cfg)
+
+    def _maybe_remat(f):
+        return jax.checkpoint(f, prevent_cse=False) \
+            if cfg.remat == "block" else f
+
+    # ---- forward (train / prefill) -------------------------------------
+    def forward(params, inputs, collect_kv: bool = False,
+                last_only: bool = False, return_hidden: bool = False):
+        h = _embed(params, inputs)
+
+        if cfg.family in ("dense", "moe"):
+            kv_all = []
+
+            def run_stack(h, blocks, windows):
+                def body(hc, bp):
+                    if paired:
+                        bpl = jax.tree_util.tree_map(lambda a: a[0], bp)
+                        bpg = jax.tree_util.tree_map(lambda a: a[1], bp)
+                        hc, kv1 = _dense_block_fwd(bpl, hc, cfg.local_window,
+                                                   collect_kv)
+                        hc, kv2 = _dense_block_fwd(bpg, hc, 0, collect_kv)
+                        if collect_kv:
+                            kv = jax.tree_util.tree_map(
+                                lambda a, b: jnp.stack([a, b]), kv1, kv2)
+                        else:
+                            kv = None
+                    else:
+                        hc, kv = _dense_block_fwd(bp, hc, windows,
+                                                  collect_kv)
+                    return _seq_shard(hc), kv
+                body = _maybe_remat(body)
+                return jax.lax.scan(body, h, blocks)
+
+            if cfg.family == "moe" and cfg.first_dense_layers:
+                def dbody(hc, bp):
+                    hc, kv = _dense_block_fwd(bp, hc, 0, collect_kv)
+                    return _seq_shard(hc), kv
+                dbody = _maybe_remat(dbody)
+                h, kv_d = jax.lax.scan(dbody, h, params["dense_blocks"])
+                kv_all.append(kv_d)
+
+            blocks = params["blocks"]
+            if paired:
+                blocks = jax.tree_util.tree_map(
+                    lambda a: a.reshape((L // 2, 2) + a.shape[1:]), blocks)
+            h, kv_m = run_stack(h, blocks, 0)
+            kv_all.append(kv_m)
+
+        elif cfg.family == "ssm":
+            def body(hc, bp):
+                return _mamba_block_fwd(bp, hc), None
+            body = _maybe_remat(body)
+            h, _ = jax.lax.scan(body, h, params["blocks"])
+            kv_all = [None]
+
+        elif cfg.family == "hybrid":
+            kv_all = []
+            n_sites, rem = divmod(L, cfg.attn_every)
+
+            def mbody(hc, bp):
+                return _mamba_block_fwd(bp, hc), None
+            mbody = _maybe_remat(mbody)
+            blocks = params["blocks"]
+            for s in range(n_sites):
+                grp = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, s * cfg.attn_every, cfg.attn_every), blocks)
+                h, _ = jax.lax.scan(mbody, h, grp)
+                h, kv = _dense_block_fwd(params["shared"], h, 0, collect_kv)
+                kv_all.append(kv)
+            if rem:
+                tail = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, n_sites * cfg.attn_every, rem), blocks)
+                h, _ = jax.lax.scan(mbody, h, tail)
+
+        if last_only:
+            h = h[:, -1:]          # slice before the vocab projection
+        h = rms_norm(h, params["final_norm"])
+        if return_hidden:
+            return h
+        return (_logits(params, h), kv_all) if collect_kv \
+            else _logits(params, h)
+
+    # ---- loss ------------------------------------------------------------
+    def loss_fn(params, batch):
+        h = forward(params, batch["inputs"], return_hidden=True)
+        # chunked CE: the [tokens, vocab] f32 logits never materialize
+        return chunked_cross_entropy(h, params["lm_head"],
+                                     batch["targets"],
+                                     softcap=cfg.final_logit_softcap)
+
+    # ---- KV / state caches -------------------------------------------------
+    def init_cache(batch: int, max_len: int):
+        if cfg.family in ("dense", "moe"):
+            KV, hd = cfg.num_kv_heads, cfg.head_dim
+            if cfg.kv_cache_dtype == "int8":
+                return {
+                    "k": jnp.zeros((L, batch, KV, max_len, hd), jnp.int8),
+                    "v": jnp.zeros((L, batch, KV, max_len, hd), jnp.int8),
+                    "k_scale": jnp.zeros((L, batch, KV, max_len, 1),
+                                         jnp.float32),
+                    "v_scale": jnp.zeros((L, batch, KV, max_len, 1),
+                                         jnp.float32),
+                }
+            return {
+                "k": jnp.zeros((L, batch, KV, max_len, hd), dtype),
+                "v": jnp.zeros((L, batch, KV, max_len, hd), dtype),
+            }
+        if cfg.family == "ssm":
+            st = jax.vmap(lambda _: mamba_init_state(cfg, batch, dtype))(
+                jnp.arange(L))
+            return st
+        if cfg.family == "hybrid":
+            n_sites = L // cfg.attn_every
+            KV, hd = cfg.num_kv_heads, cfg.head_dim
+            st = jax.vmap(lambda _: mamba_init_state(cfg, batch, dtype))(
+                jnp.arange(L))
+            st["k"] = jnp.zeros((n_sites, batch, KV, max_len, hd), dtype)
+            st["v"] = jnp.zeros((n_sites, batch, KV, max_len, hd), dtype)
+            return st
+        raise ValueError(cfg.family)
+
+    # ---- prefill ------------------------------------------------------------
+    def prefill(params, inputs, max_len: int):
+        """Run the full prompt, return (last-token logits, filled cache)."""
+        B = inputs.shape[0]
+        S = inputs.shape[1]
+        if cfg.family in ("dense", "moe"):
+            logits, kv_all = forward(params, inputs, collect_kv=True,
+                                     last_only=True)
+            cache = init_cache(B, max_len)
+            parts_k, parts_v = [], []
+            for kv in kv_all:
+                if kv is None:
+                    continue
+                kk, vv = kv
+                if kk.ndim == 6:               # paired: [L/2, 2, B, ...]
+                    kk = kk.reshape((-1,) + kk.shape[2:])
+                    vv = vv.reshape((-1,) + vv.shape[2:])
+                parts_k.append(kk)
+                parts_v.append(vv)
+            k_new = jnp.concatenate(parts_k, 0).astype(dtype)
+            v_new = jnp.concatenate(parts_v, 0).astype(dtype)
+            if cfg.kv_cache_dtype == "int8":
+                from ..kernels import ops as kops
+                k_new, ks = kops.quantize_kv(k_new)
+                v_new, vs = kops.quantize_kv(v_new)
+                cache["k_scale"] = jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks.astype(jnp.float32),
+                    (0, 0, 0, 0, 0))
+                cache["v_scale"] = jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs.astype(jnp.float32),
+                    (0, 0, 0, 0, 0))
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+            return logits[:, -1:], cache
+        # ssm / hybrid prefill: run forward and rebuild decode state by
+        # replaying the final states (cheap path: token-by-token is O(S);
+        # we use the chunked forward's final states instead)
+        logits = forward(params, inputs, last_only=True)
+        cache = init_cache(B, max_len)
+        return logits, cache
+
+    # ---- decode -------------------------------------------------------------
+    def decode_step(params, cache, tokens, cache_len):
+        """tokens: [B, 1] int32; cache_len: [] int32 (tokens already in
+        cache).  Returns (logits [B,1,V], updated cache)."""
+        h = _embed(params, tokens)
+
+        if cfg.family in ("dense", "moe"):
+            windows = None
+            if paired:
+                windows = jnp.tile(
+                    jnp.array([cfg.local_window, 0], jnp.int32), L // 2)
+
+            start = 0
+            if cfg.family == "moe" and cfg.first_dense_layers:
+                fd = cfg.first_dense_layers
+
+                def dbody(carry, xs):
+                    hc = carry
+                    bp, kc, vc = xs
+                    a_in = rms_norm(hc, bp["ln1"])
+                    a, kc, vc = attn_decode(bp["attn"], a_in, cfg, kc, vc,
+                                            cache_len, 0)
+                    hc = hc + a
+                    f_in = rms_norm(hc, bp["ln2"])
+                    hc = hc + _gated_mlp(bp["mlp"], f_in)
+                    return hc, (kc, vc)
+
+                h, (kd, vd) = jax.lax.scan(
+                    dbody, h, (params["dense_blocks"],
+                               cache["k"][:fd], cache["v"][:fd]))
+                cache["k"] = cache["k"].at[:fd].set(kd)
+                cache["v"] = cache["v"].at[:fd].set(vd)
+                start = fd
+
+            quant = cfg.kv_cache_dtype == "int8"
+
+            def body(carry, xs):
+                hc = carry
+                win = 0
+                ks = vs = None
+                if paired and quant:
+                    bp, kc, vc, ks, vs, win = xs
+                elif paired:
+                    bp, kc, vc, win = xs
+                elif quant:
+                    bp, kc, vc, ks, vs = xs
+                else:
+                    bp, kc, vc = xs
+                a_in = rms_norm(hc, bp["ln1"])
+                res = attn_decode(bp["attn"], a_in, cfg, kc, vc,
+                                  cache_len, window=win,
+                                  k_scale=ks, v_scale=vs)
+                a, kc, vc = res[0], res[1], res[2]
+                hc = hc + a
+                f_in = rms_norm(hc, bp["ln2"])
+                if "mlp" in bp:
+                    ffn = _gated_mlp(bp["mlp"], f_in)
+                else:
+                    ffn = _routed_moe(bp["moe"], f_in)
+                    if "shared" in bp["moe"]:
+                        ffn = ffn + shared_expert_ffn(bp["moe"], f_in)
+                ys = (kc, vc) + ((res[3], res[4]) if quant else ())
+                return hc + ffn, ys
+
+            xs = (params["blocks"], cache["k"][start:], cache["v"][start:])
+            if quant:
+                xs = xs + (cache["k_scale"][start:],
+                           cache["v_scale"][start:])
+            if paired:
+                xs = xs + (windows,)
+            h, new_vals = jax.lax.scan(body, h, xs)
+            cache["k"] = cache["k"].at[start:].set(new_vals[0])
+            cache["v"] = cache["v"].at[start:].set(new_vals[1])
+            if quant:
+                cache["k_scale"] = cache["k_scale"].at[start:].set(
+                    new_vals[2])
+                cache["v_scale"] = cache["v_scale"].at[start:].set(
+                    new_vals[3])
+
+        elif cfg.family == "ssm":
+            def body(hc, xs):
+                bp, st = xs
+                out, st = mamba_decode(bp["mamba"],
+                                       rms_norm(hc, bp["ln"]), st, cfg)
+                return hc + out, st
+            h, cache = jax.lax.scan(body, h, (params["blocks"], cache))
+
+        elif cfg.family == "hybrid":
+            n_sites = L // cfg.attn_every
+            rem = L - n_sites * cfg.attn_every
+            blocks = params["blocks"]
+
+            def mbody(hc, xs):
+                bp, st = xs
+                out, st = mamba_decode(bp["mamba"],
+                                       rms_norm(hc, bp["ln"]), st, cfg)
+                return hc + out, st
+
+            mstate = {k: cache[k] for k in
+                      ("conv_x", "conv_b", "conv_c", "ssm")}
+            st_out = []
+            k_out, v_out = [], []
+            for s in range(n_sites):
+                sl = slice(s * cfg.attn_every, (s + 1) * cfg.attn_every)
+                grp = jax.tree_util.tree_map(lambda a: a[sl], blocks)
+                st_sl = jax.tree_util.tree_map(lambda a: a[sl], mstate)
+                h, st_new = jax.lax.scan(mbody, h, (grp, st_sl))
+                st_out.append(st_new)
+                sp = params["shared"]
+                a_in = rms_norm(h, sp["ln1"])
+                a, kc, vc = attn_decode(sp["attn"], a_in, cfg,
+                                        cache["k"][s], cache["v"][s],
+                                        cache_len, 0)
+                h = h + a
+                h = h + _gated_mlp(sp["mlp"], rms_norm(h, sp["ln2"]))
+                k_out.append(kc)
+                v_out.append(vc)
+            if rem:
+                sl = slice(n_sites * cfg.attn_every, L)
+                grp = jax.tree_util.tree_map(lambda a: a[sl], blocks)
+                st_sl = jax.tree_util.tree_map(lambda a: a[sl], mstate)
+                h, st_new = jax.lax.scan(mbody, h, (grp, st_sl))
+                st_out.append(st_new)
+            cache = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, 0), *st_out)
+            cache["k"] = jnp.stack(k_out, 0)
+            cache["v"] = jnp.stack(v_out, 0)
+
+        h = rms_norm(h, params["final_norm"])
+        return _logits(params, h), cache
+
+    return ModelAPI(cfg, init, forward, prefill, init_cache, decode_step,
+                    loss_fn)

@@ -1,0 +1,92 @@
+"""GQA attention block (RoPE, optional QKV bias, local window, softcap)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .common import dense_init, rope, split_keys
+
+
+def init_attn(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    p = {
+        "wq": dense_init(ks["wq"], (d, H * hd), d, dtype),
+        "wk": dense_init(ks["wk"], (d, KV * hd), d, dtype),
+        "wv": dense_init(ks["wv"], (d, KV * hd), d, dtype),
+        "wo": dense_init(ks["wo"], (H * hd, d), H * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _project_qkv(p: Dict, x: jnp.ndarray, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    return q, k, v
+
+
+def attn_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 window: int = 0) -> jnp.ndarray:
+    """Full-sequence (train / prefill) attention."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = ops.attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                      jnp.swapaxes(v, 1, 2), causal=True, window=window,
+                      logit_softcap=cfg.attn_logit_softcap)
+    o = jnp.swapaxes(o, 1, 2).reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return o @ p["wo"]
+
+
+def attn_decode(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                cache_len: jnp.ndarray, window: int = 0,
+                k_scale=None, v_scale=None):
+    """One-token decode.  x: [B, 1, d]; caches: [B, KV, Smax, hd].
+    With int8 caches, k_scale/v_scale are per-position scale planes
+    [B, KV, Smax, 1] and new entries are quantized on write.
+    Returns (out [B,1,d], new caches...) — scales appended when present."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg, cache_len[None, None])
+    k_entry = jnp.swapaxes(k, 1, 2)            # [B, KV, 1, hd]
+    v_entry = jnp.swapaxes(v, 1, 2)
+    quant = k_scale is not None
+    if quant:
+        k_entry, ks_new = ops.quantize_kv(k_entry)
+        v_entry, vs_new = ops.quantize_kv(v_entry)
+        k_scale = jax.lax.dynamic_update_slice(
+            k_scale, ks_new.astype(k_scale.dtype), (0, 0, cache_len, 0))
+        v_scale = jax.lax.dynamic_update_slice(
+            v_scale, vs_new.astype(v_scale.dtype), (0, 0, cache_len, 0))
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_entry.astype(k_cache.dtype), (0, 0, cache_len, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_entry.astype(v_cache.dtype), (0, 0, cache_len, 0))
+    o = ops.decode_attention(jnp.swapaxes(q, 1, 2), k_cache, v_cache,
+                             cache_len + 1, window=window,
+                             logit_softcap=cfg.attn_logit_softcap,
+                             k_scale=k_scale, v_scale=v_scale)
+    o = jnp.swapaxes(o, 1, 2).reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    out = o @ p["wo"]
+    if quant:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache

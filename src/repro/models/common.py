@@ -1,0 +1,130 @@
+"""Shared model components: norms, RoPE, init helpers."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _rms_norm_impl(x: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+@jax.custom_vjp
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm with a hand-written VJP: stats computed in f32, but the saved
+    residuals and the outgoing cotangent stay in x.dtype (bf16) — autodiff of
+    the f32-internals version otherwise drags f32 [B,S,d] intermediates
+    through every layer's backward (§Perf iteration 6)."""
+    return _rms_norm_impl(x, scale)
+
+
+def _rms_fwd(x, scale):
+    return _rms_norm_impl(x, scale), (x, scale)
+
+
+def _rms_bwd(res, dy):
+    x, scale = res
+    eps = 1e-6
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = xf * rstd
+    w = 1.0 + scale.astype(jnp.float32)
+    u = dy.astype(jnp.float32) * w
+    dx = rstd * (u - xhat * jnp.mean(u * xhat, axis=-1, keepdims=True))
+    dscale = jnp.sum(dy.astype(jnp.float32) * xhat,
+                     axis=tuple(range(dy.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embeddings.  x: [B, S, H, D]; positions: [B, S] or [S]."""
+    D = x.shape[-1]
+    half = D // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freq  # [B,S,half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), \
+        x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key: jax.Array, shape, fan_in: int | None = None,
+               dtype=jnp.bfloat16) -> jnp.ndarray:
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 \
+        else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key: jax.Array, names) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))
+
+
+def cross_entropy_loss(logits: jnp.ndarray, targets: jnp.ndarray,
+                       vocab_size: int, z_loss: float = 1e-4):
+    """Token CE with optional z-loss; logits: [B,S,V], targets: [B,S]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_loss > 0:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def chunked_cross_entropy(h: jnp.ndarray, lm_head: jnp.ndarray,
+                          targets: jnp.ndarray, softcap: float = 0.0,
+                          chunk: int = 512, z_loss: float = 1e-4):
+    """CE computed per sequence chunk with rematerialization: the full
+    [tokens, vocab] f32 logits tensor never materializes (fwd) and is
+    recomputed per chunk (bwd).  Cuts the vocab-projection working set from
+    O(S x V) to O(chunk x V) — a large memory-roofline term for 64k-256k
+    vocabularies (§Perf iteration 5)."""
+    B, S, d = h.shape
+    if S % chunk != 0:
+        return cross_entropy_loss(
+            _apply_head(h, lm_head, softcap), targets, lm_head.shape[-1],
+            z_loss)
+    nc = S // chunk
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one(hx, tx):
+        logits = _apply_head(hx, lm_head, softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tx[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold) + z_loss * jnp.sum(jnp.square(lse))
+
+    def body(acc, xs):
+        hx, tx = xs
+        return acc + one(hx, tx), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    return total / (B * S)
+
+
+def _apply_head(h, lm_head, softcap):
+    logits = h.astype(jnp.float32) @ lm_head.astype(jnp.float32)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Design (TPU-native adaptation — see DESIGN.md §2):
+  * experts are sharded over the ``model`` mesh axis (the paper's ``stack``
+    over a tensor-exclusive dim: expert weights are never replicated);
+  * routing is computed redundantly on every model-shard (tokens are
+    replicated across ``model`` after the attention all-reduce anyway);
+  * each shard gathers capacity-bounded buffers for its *local* experts only
+    (sort-free capacity assignment via ranked positions), runs the batched
+    expert FFN (dense, MXU-aligned), scatter-adds gated outputs, and a
+    single ``psum`` over ``model`` combines partial outputs — the same
+    collective a tensor-parallel FFN would need, so no extra latency class.
+
+FLOPs are honest: only local-expert capacity buffers are computed (top-k x
+capacity-factor tokens per expert), never a dense all-experts pass and never
+a quadratic one-hot dispatch einsum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, pad_to
+from .common import dense_init, split_keys
+
+
+def padded_experts(cfg: ModelConfig, model_axis_size: int) -> int:
+    """Experts padded up so the model axis divides them evenly (padding
+    experts receive -inf router logits and are never selected)."""
+    return pad_to(cfg.num_experts, max(1, model_axis_size))
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, model_axis_size: int,
+             dtype=jnp.bfloat16) -> Dict:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    E = padded_experts(cfg, model_axis_size)
+    ks = split_keys(key, ["router", "wi", "wg", "wo", "swi", "swg", "swo"])
+    p = {
+        "router": dense_init(ks["router"], (d, E), d, jnp.float32),
+        "wi": dense_init(ks["wi"], (E, d, f), d, dtype),
+        "wg": dense_init(ks["wg"], (E, d, f), d, dtype),
+        "wo": dense_init(ks["wo"], (E, f, d), f, dtype),
+    }
+    if cfg.num_shared_experts > 0:
+        fs = f * cfg.num_shared_experts
+        p["shared"] = {
+            "wi": dense_init(ks["swi"], (d, fs), d, dtype),
+            "wg": dense_init(ks["swg"], (d, fs), d, dtype),
+            "wo": dense_init(ks["swo"], (fs, d), fs, dtype),
+        }
+    return p
+
+
+def _capacity(tokens: int, num_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(tokens * top_k * capacity_factor / num_experts) + 1
+    return max(4, pad_to(c, 4))
+
+
+def moe_ffn(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+            model_axis: Optional[str] = None) -> jnp.ndarray:
+    """x: [B_local, S, d].  When called inside shard_map, ``p['wi'/'wg'/'wo']``
+    arrive as the *local* expert shard ([E_local, ...], spec P('model', ...))
+    while the router stays replicated; outside shard_map E_local == E.
+    Returns [B_local, S, d] (psum'd over ``model`` when present)."""
+    B, S, d = x.shape
+    T = B * S
+    E = p["router"].shape[-1]
+    E_local = p["wi"].shape[0]
+    k = cfg.top_k
+    C = _capacity(T, E, k, cfg.capacity_factor)
+
+    xt = x.reshape(T, d)
+    logits = xt.astype(jnp.float32) @ p["router"]             # [T, E]
+    # mask padding experts
+    if E > cfg.num_experts:
+        pad_mask = jnp.arange(E) >= cfg.num_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    top_gates, top_e = jax.lax.top_k(gates_all, k)             # [T, k]
+    top_gates = top_gates / jnp.maximum(
+        jnp.sum(top_gates, -1, keepdims=True), 1e-9)
+
+    # ---- capacity positions: rank of each (token, slot) within its expert
+    e_flat = top_e.reshape(-1)                                # [T*k]
+    gate_flat = top_gates.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(e_flat)                               # group by expert
+    e_sorted = e_flat[order]
+    # position within expert group = index - first occurrence of the expert
+    first = jnp.searchsorted(e_sorted, e_sorted, side="left")
+    pos = jnp.arange(T * k) - first                           # [T*k]
+    keep = pos < C
+
+    # ---- local expert window
+    shard = jax.lax.axis_index(model_axis) if model_axis else 0
+    e_start = shard * E_local
+    local = (e_sorted >= e_start) & (e_sorted < e_start + E_local) & keep
+    dest = jnp.where(local, (e_sorted - e_start) * C + pos, E_local * C)
+
+    tok_sorted = tok_flat[order]
+    gate_sorted = gate_flat[order]
+    buf = jnp.zeros((E_local * C + 1, d), x.dtype)
+    buf = buf.at[dest].set(xt[tok_sorted] *
+                           local[:, None].astype(x.dtype))
+    buf = buf[: E_local * C].reshape(E_local, C, d)
+
+    # ---- batched expert FFN (gated) over local experts ----------------------
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"]) * \
+        jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"]))
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])                # [E_local,C,d]
+
+    # ---- combine: scatter-add gated outputs back to tokens ------------------
+    y_flat = jnp.concatenate(
+        [y.reshape(E_local * C, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    contrib = y_flat[dest] * (gate_sorted * local)[:, None].astype(y.dtype)
+    out = jnp.zeros((T, d), jnp.float32).at[tok_sorted].add(
+        contrib.astype(jnp.float32))
+    if model_axis:
+        out = jax.lax.psum(out, model_axis)
+    return out.astype(x.dtype).reshape(B, S, d)
+
+
+def shared_expert_ffn(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Always-on shared experts: a plain gated FFN, computed *outside* the
+    expert-parallel shard_map so it is tensor-parallel like any dense FFN
+    (never redundantly replicated across the model axis)."""
+    sp = p["shared"]
+    h = (x @ sp["wi"]) * jax.nn.silu(x @ sp["wg"])
+    return h @ sp["wo"]

@@ -1,0 +1,130 @@
+"""Mamba2 (SSD) block: in-proj -> causal conv -> selective SSM -> gated out.
+
+Train/prefill uses the chunked SSD path (``kernels.ops.ssd`` — Pallas
+intra-chunk kernel on TPU); decode maintains O(1) per-token state
+(conv tail + SSM state), which is what makes long_500k runnable.
+
+Projections are kept as separate weights (w_z, w_x, w_b, w_c, w_dt) rather
+than one packed matrix so each shards cleanly: the inner dim ``di`` (and the
+head dim H = di / head_dim) goes over the ``model`` mesh axis; the small
+shared B/C projections stay replicated.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .common import dense_init, rms_norm, split_keys
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    return di, H, cfg.ssm_state
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    di, H, N = ssm_dims(cfg)
+    cw = cfg.conv_width
+    ks = split_keys(key, ["w_z", "w_x", "w_b", "w_c", "w_dt", "w_out"])
+    return {
+        "w_z": dense_init(ks["w_z"], (d, di), d, dtype),
+        "w_x": dense_init(ks["w_x"], (d, di), d, dtype),
+        "w_b": dense_init(ks["w_b"], (d, N), d, dtype),
+        "w_c": dense_init(ks["w_c"], (d, N), d, dtype),
+        "w_dt": dense_init(ks["w_dt"], (d, H), d, dtype),
+        "conv_x_w": dense_init(jax.random.fold_in(key, 1), (cw, di), cw,
+                               dtype),
+        "conv_b_w": dense_init(jax.random.fold_in(key, 2), (cw, N), cw,
+                               dtype),
+        "conv_c_w": dense_init(jax.random.fold_in(key, 3), (cw, N), cw,
+                               dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_b_b": jnp.zeros((N,), dtype),
+        "conv_c_b": jnp.zeros((N,), dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks["w_out"], (di, d), di, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv along seq.  x: [B,S,C]; w: [cw, C]."""
+    B, S, C = x.shape
+    cw = w.shape[0]
+    pad = jnp.zeros((B, cw - 1, C), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i: i + S] * w[i] for i in range(cw))
+    return jax.nn.silu(y + b)
+
+
+def mamba_forward(p: Dict, x_in: jnp.ndarray, cfg: ModelConfig,
+                  ) -> jnp.ndarray:
+    """Full-sequence forward.  x_in: [B, S, d]."""
+    B, S, _ = x_in.shape
+    di, H, N = ssm_dims(cfg)
+    z = x_in @ p["w_z"]
+    xs = _causal_conv(x_in @ p["w_x"], p["conv_x_w"], p["conv_x_b"])
+    b = _causal_conv(x_in @ p["w_b"], p["conv_b_w"], p["conv_b_b"])
+    c = _causal_conv(x_in @ p["w_c"], p["conv_c_w"], p["conv_c_b"])
+    dt = jax.nn.softplus((x_in @ p["w_dt"]).astype(jnp.float32) +
+                         p["dt_bias"])
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    y, _ = ops.ssd(xh, dt, p["a_log"], b, c)
+    y = y + xh * p["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["w_out"]
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, H, N = ssm_dims(cfg)
+    cw = cfg.conv_width
+    return {
+        "conv_x": jnp.zeros((batch, cw - 1, di), dtype),
+        "conv_b": jnp.zeros((batch, cw - 1, N), dtype),
+        "conv_c": jnp.zeros((batch, cw - 1, N), dtype),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+    }
+
+
+def _conv_step(tail: jnp.ndarray, xt: jnp.ndarray, w: jnp.ndarray,
+               b: jnp.ndarray):
+    """tail: [B, cw-1, C]; xt: [B, C] -> (y [B, C], new tail)."""
+    window = jnp.concatenate([tail, xt[:, None]], axis=1)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return jax.nn.silu(y + b.astype(jnp.float32)).astype(xt.dtype), \
+        window[:, 1:]
+
+
+def mamba_decode(p: Dict, x_in: jnp.ndarray, state: Dict, cfg: ModelConfig,
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode.  x_in: [B, 1, d]."""
+    B = x_in.shape[0]
+    di, H, N = ssm_dims(cfg)
+    xt = x_in[:, 0]
+    z = xt @ p["w_z"]
+    xs, conv_x = _conv_step(state["conv_x"], xt @ p["w_x"],
+                            p["conv_x_w"], p["conv_x_b"])
+    b, conv_b = _conv_step(state["conv_b"], xt @ p["w_b"],
+                           p["conv_b_w"], p["conv_b_b"])
+    c, conv_c = _conv_step(state["conv_c"], xt @ p["w_c"],
+                           p["conv_c_w"], p["conv_c_b"])
+    dt = jax.nn.softplus((xt @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(B, H, cfg.ssm_head_dim)
+    h, y = ops.ssd_decode(state["ssm"], xh, dt, p["a_log"], b, c)
+    y = y + xh * p["d_skip"][None, :, None].astype(xh.dtype)
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["w_out"])[:, None]
+    return out, {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c,
+                 "ssm": h}

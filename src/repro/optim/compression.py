@@ -1,0 +1,64 @@
+"""Gradient compression with error feedback (int8 quantization).
+
+For cross-pod (DCI) gradient reduction the wire bytes dominate; int8 with
+per-tensor scale cuts them 4x vs f32 (2x vs bf16).  Error feedback keeps
+the quantization noise from biasing convergence: the residual of each
+round is added back before the next quantization (Seide et al. / EF-SGD).
+
+``compress -> (payload, scale)`` / ``decompress`` are pure functions so
+they slot into any collective path (e.g. quantize, psum int32, dequantize).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda g: compress(g), grads)
+
+
+def ef_round(grads: PyTree, error: PyTree) -> Tuple[PyTree, PyTree]:
+    """One error-feedback round: (compensated-compressed grads, new error).
+
+    Returns the dequantized gradients (what the optimizer consumes after
+    the wire trip) and the residual to carry into the next step.
+    """
+    def one(g, e):
+        comp = g.astype(jnp.float32) + e
+        q, s = compress(comp)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), comp - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def init_error(grads_template: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_template)
+
+
+def wire_bytes_saved(grads: PyTree) -> Tuple[int, int]:
+    """(bf16 wire bytes, int8 wire bytes) for reporting."""
+    n = sum(x.size for x in jax.tree_util.tree_leaves(grads))
+    return 2 * n, n + 4 * len(jax.tree_util.tree_leaves(grads))

@@ -1,0 +1,73 @@
+"""Straggler mitigation.
+
+SPMD steps are gang-scheduled: one slow host stalls the whole pod.  Two
+mitigations, both host-side (no device code changes):
+
+* ``StragglerDetector`` — EWMA of step latencies with an outlier threshold;
+  flags hosts whose recent steps exceed ``factor`` x the fleet median so the
+  controller can drain/replace them before they become failures.
+* ``BackupDispatcher`` — duplicate-dispatch of *input pipeline* work (the
+  common non-SPMD straggler source): issue each host's batch generation to
+  a backup worker after a deadline, take whichever finishes first
+  (deterministic: both produce identical bytes by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    factor: float = 1.8
+    alpha: float = 0.2                  # EWMA smoothing
+    warmup: int = 5
+
+    def __post_init__(self):
+        self._ewma: Dict[str, float] = {}
+        self._count: Dict[str, int] = {}
+
+    def record(self, host: str, seconds: float) -> None:
+        prev = self._ewma.get(host)
+        self._ewma[host] = seconds if prev is None else \
+            (1 - self.alpha) * prev + self.alpha * seconds
+        self._count[host] = self._count.get(host, 0) + 1
+
+    def fleet_median(self) -> Optional[float]:
+        vals = [v for h, v in self._ewma.items()
+                if self._count.get(h, 0) >= self.warmup]
+        return statistics.median(vals) if vals else None
+
+    def stragglers(self) -> List[str]:
+        med = self.fleet_median()
+        if med is None or med <= 0:
+            return []
+        return [h for h, v in self._ewma.items()
+                if self._count.get(h, 0) >= self.warmup
+                and v > self.factor * med]
+
+
+class BackupDispatcher:
+    """speculative duplicate execution with a deadline."""
+
+    def __init__(self, deadline_seconds: float, workers: int = 2):
+        self.deadline = deadline_seconds
+        self.pool = ThreadPoolExecutor(max_workers=workers)
+
+    def run(self, primary: Callable[[], object],
+            backup: Callable[[], object]) -> object:
+        f1 = self.pool.submit(primary)
+        done, _ = wait([f1], timeout=self.deadline,
+                       return_when=FIRST_COMPLETED)
+        if done:
+            return f1.result()
+        f2 = self.pool.submit(backup)
+        done, _ = wait([f1, f2], return_when=FIRST_COMPLETED)
+        winner = done.pop()
+        return winner.result()
+
+    def close(self):
+        self.pool.shutdown(wait=False, cancel_futures=True)

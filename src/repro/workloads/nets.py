@@ -1,0 +1,192 @@
+"""The seven evaluated networks from KAPLA §V (Methodology).
+
+AlexNet, MobileNet, VGGNet(-16), GoogLeNet, ResNet(-50), an MLP, and an LSTM.
+Default batch 64 (paper), batch 1 for edge inference.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .layers import LayerGraph, LayerSpec, conv, dwconv, eltwise, fc, pool
+
+
+def alexnet(batch: int = 64) -> LayerGraph:
+    L: List[LayerSpec] = []
+    L.append(conv("conv1", batch, 3, 96, 55, 55, 11, 11, stride=4))
+    L.append(pool("pool1", batch, 96, 27, 27, 3, 3, src=["conv1"]))
+    L.append(conv("conv2", batch, 96, 256, 27, 27, 5, 5, src=["pool1"]))
+    L.append(pool("pool2", batch, 256, 13, 13, 3, 3, src=["conv2"]))
+    L.append(conv("conv3", batch, 256, 384, 13, 13, 3, 3, src=["pool2"]))
+    L.append(conv("conv4", batch, 384, 384, 13, 13, 3, 3, src=["conv3"]))
+    L.append(conv("conv5", batch, 384, 256, 13, 13, 3, 3, src=["conv4"]))
+    L.append(pool("pool5", batch, 256, 6, 6, 3, 3, src=["conv5"]))
+    L.append(fc("fc6", batch, 256 * 6 * 6, 4096, src=["pool5"]))
+    L.append(fc("fc7", batch, 4096, 4096, src=["fc6"]))
+    L.append(fc("fc8", batch, 4096, 1000, src=["fc7"]))
+    return LayerGraph("alexnet", L)
+
+
+def mobilenet(batch: int = 64) -> LayerGraph:
+    # MobileNet-v1: conv, then 13 (dw + pw) pairs.
+    cfg = [  # (c_in, c_out, stride, x_out)
+        (32, 64, 1, 112), (64, 128, 2, 56), (128, 128, 1, 56),
+        (128, 256, 2, 28), (256, 256, 1, 28), (256, 512, 2, 14),
+        (512, 512, 1, 14), (512, 512, 1, 14), (512, 512, 1, 14),
+        (512, 512, 1, 14), (512, 512, 1, 14), (512, 1024, 2, 7),
+        (1024, 1024, 1, 7),
+    ]
+    L: List[LayerSpec] = [conv("conv1", batch, 3, 32, 112, 112, 3, 3, stride=2)]
+    prev = "conv1"
+    for i, (ci, co, st, xo) in enumerate(cfg):
+        dw = f"dw{i + 1}"
+        pw = f"pw{i + 1}"
+        L.append(dwconv(dw, batch, ci, xo, xo, 3, 3, stride=st, src=[prev]))
+        L.append(conv(pw, batch, ci, co, xo, xo, 1, 1, src=[dw]))
+        prev = pw
+    L.append(pool("gap", batch, 1024, 1, 1, 7, 7, stride=7, src=[prev]))
+    L.append(fc("fc", batch, 1024, 1000, src=["gap"]))
+    return LayerGraph("mobilenet", L)
+
+
+def vggnet(batch: int = 64) -> LayerGraph:
+    cfg = [  # (n_convs, channels, x)
+        (2, 64, 224), (2, 128, 112), (3, 256, 56), (3, 512, 28), (3, 512, 14)]
+    L: List[LayerSpec] = []
+    prev_name, prev_c = "", 3
+    for b, (n_convs, ch, x) in enumerate(cfg):
+        for i in range(n_convs):
+            nm = f"conv{b + 1}_{i + 1}"
+            L.append(conv(nm, batch, prev_c, ch, x, x, 3, 3,
+                          src=[prev_name] if prev_name else []))
+            prev_name, prev_c = nm, ch
+        pn = f"pool{b + 1}"
+        L.append(pool(pn, batch, ch, x // 2, x // 2, 2, 2, src=[prev_name]))
+        prev_name = pn
+    L.append(fc("fc6", batch, 512 * 7 * 7, 4096, src=[prev_name]))
+    L.append(fc("fc7", batch, 4096, 4096, src=["fc6"]))
+    L.append(fc("fc8", batch, 4096, 1000, src=["fc7"]))
+    return LayerGraph("vggnet", L)
+
+
+def _inception(L: List[LayerSpec], name: str, src: str, batch: int, c_in: int,
+               x: int, b1: int, b3r: int, b3: int, b5r: int, b5: int,
+               bp: int) -> str:
+    """GoogLeNet inception module; returns the (concatenated) output name."""
+    L.append(conv(f"{name}.1x1", batch, c_in, b1, x, x, 1, 1, src=[src]))
+    L.append(conv(f"{name}.3r", batch, c_in, b3r, x, x, 1, 1, src=[src]))
+    L.append(conv(f"{name}.3x3", batch, b3r, b3, x, x, 3, 3, src=[f"{name}.3r"]))
+    L.append(conv(f"{name}.5r", batch, c_in, b5r, x, x, 1, 1, src=[src]))
+    L.append(conv(f"{name}.5x5", batch, b5r, b5, x, x, 5, 5, src=[f"{name}.5r"]))
+    L.append(conv(f"{name}.pp", batch, c_in, bp, x, x, 1, 1, src=[src]))
+    # concat is free; downstream layers consume the 4 branches jointly — we
+    # model it with an eltwise-free passthrough by naming convention: the
+    # concatenated tensor is referenced as "<name>.out" via a cheap eltwise.
+    L.append(eltwise(f"{name}.out", batch, b1 + b3 + b5 + bp, x, x,
+                     src=[f"{name}.1x1", f"{name}.3x3", f"{name}.5x5",
+                          f"{name}.pp"]))
+    return f"{name}.out"
+
+
+def googlenet(batch: int = 64) -> LayerGraph:
+    L: List[LayerSpec] = []
+    L.append(conv("conv1", batch, 3, 64, 112, 112, 7, 7, stride=2))
+    L.append(pool("pool1", batch, 64, 56, 56, 3, 3, src=["conv1"]))
+    L.append(conv("conv2r", batch, 64, 64, 56, 56, 1, 1, src=["pool1"]))
+    L.append(conv("conv2", batch, 64, 192, 56, 56, 3, 3, src=["conv2r"]))
+    L.append(pool("pool2", batch, 192, 28, 28, 3, 3, src=["conv2"]))
+    o = _inception(L, "i3a", "pool2", batch, 192, 28, 64, 96, 128, 16, 32, 32)
+    o = _inception(L, "i3b", o, batch, 256, 28, 128, 128, 192, 32, 96, 64)
+    L.append(pool("pool3", batch, 480, 14, 14, 3, 3, src=[o]))
+    o = _inception(L, "i4a", "pool3", batch, 480, 14, 192, 96, 208, 16, 48, 64)
+    o = _inception(L, "i4b", o, batch, 512, 14, 160, 112, 224, 24, 64, 64)
+    o = _inception(L, "i4c", o, batch, 512, 14, 128, 128, 256, 24, 64, 64)
+    o = _inception(L, "i4d", o, batch, 512, 14, 112, 144, 288, 32, 64, 64)
+    o = _inception(L, "i4e", o, batch, 528, 14, 256, 160, 320, 32, 128, 128)
+    L.append(pool("pool4", batch, 832, 7, 7, 3, 3, src=[o]))
+    o = _inception(L, "i5a", "pool4", batch, 832, 7, 256, 160, 320, 32, 128, 128)
+    o = _inception(L, "i5b", o, batch, 832, 7, 384, 192, 384, 48, 128, 128)
+    L.append(pool("gap", batch, 1024, 1, 1, 7, 7, stride=7, src=[o]))
+    L.append(fc("fc", batch, 1024, 1000, src=["gap"]))
+    return LayerGraph("googlenet", L)
+
+
+def _res_bottleneck(L: List[LayerSpec], name: str, src: str, batch: int,
+                    c_in: int, c_mid: int, c_out: int, x: int,
+                    stride: int = 1, project: bool = False) -> str:
+    L.append(conv(f"{name}.a", batch, c_in, c_mid, x, x, 1, 1, stride=stride,
+                  src=[src]))
+    L.append(conv(f"{name}.b", batch, c_mid, c_mid, x, x, 3, 3,
+                  src=[f"{name}.a"]))
+    L.append(conv(f"{name}.c", batch, c_mid, c_out, x, x, 1, 1,
+                  src=[f"{name}.b"]))
+    srcs = [f"{name}.c"]
+    if project:
+        L.append(conv(f"{name}.p", batch, c_in, c_out, x, x, 1, 1,
+                      stride=stride, src=[src]))
+        srcs.append(f"{name}.p")
+    else:
+        srcs.append(src)
+    L.append(eltwise(f"{name}.add", batch, c_out, x, x, src=srcs))
+    return f"{name}.add"
+
+
+def resnet50(batch: int = 64) -> LayerGraph:
+    L: List[LayerSpec] = []
+    L.append(conv("conv1", batch, 3, 64, 112, 112, 7, 7, stride=2))
+    L.append(pool("pool1", batch, 64, 56, 56, 3, 3, src=["conv1"]))
+    o = "pool1"
+    stages = [  # (n_blocks, c_mid, c_out, x)
+        (3, 64, 256, 56), (4, 128, 512, 28), (6, 256, 1024, 14),
+        (3, 512, 2048, 7)]
+    c_in = 64
+    for s, (nb, cm, co, x) in enumerate(stages):
+        for b in range(nb):
+            stride = 2 if (b == 0 and s > 0) else 1
+            o = _res_bottleneck(L, f"r{s + 2}{chr(97 + b)}", o, batch, c_in,
+                                cm, co, x, stride=stride, project=(b == 0))
+            c_in = co
+    L.append(pool("gap", batch, 2048, 1, 1, 7, 7, stride=7, src=[o]))
+    L.append(fc("fc", batch, 2048, 1000, src=["gap"]))
+    return LayerGraph("resnet50", L)
+
+
+def mlp(batch: int = 64) -> LayerGraph:
+    """MLP-L from PRIME [12]: 784-1500-1000-500-10."""
+    L = [fc("fc1", batch, 784, 1500)]
+    L.append(fc("fc2", batch, 1500, 1000, src=["fc1"]))
+    L.append(fc("fc3", batch, 1000, 500, src=["fc2"]))
+    L.append(fc("fc4", batch, 500, 10, src=["fc3"]))
+    return LayerGraph("mlp", L)
+
+
+def lstm(batch: int = 64, hidden: int = 512, steps: int = 8) -> LayerGraph:
+    """seq2seq-style LSTM [49]: per step, gate GEMMs + element-wise."""
+    L: List[LayerSpec] = []
+    prev = ""
+    for t in range(steps):
+        gx = f"t{t}.gx"
+        gh = f"t{t}.gh"
+        L.append(fc(gx, batch, hidden, 4 * hidden,
+                    src=[prev] if prev else []))
+        L.append(fc(gh, batch, hidden, 4 * hidden,
+                    src=[prev] if prev else []))
+        ew = f"t{t}.cell"
+        L.append(eltwise(ew, batch, hidden, 1, 1, src=[gx, gh]))
+        prev = ew
+    return LayerGraph("lstm", L)
+
+
+NETS = {
+    "alexnet": alexnet,
+    "mobilenet": mobilenet,
+    "vggnet": vggnet,
+    "googlenet": googlenet,
+    "resnet": resnet50,
+    "mlp": mlp,
+    "lstm": lstm,
+}
+
+
+def get_net(name: str, batch: int = 64, training: bool = False) -> LayerGraph:
+    g = NETS[name](batch)
+    return g.training_graph() if training else g

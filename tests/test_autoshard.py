@@ -1,0 +1,112 @@
+"""Autoshard planner: spec validity (divisibility), ZeRO, HBM accounting."""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.core.autoshard import plan_sharding
+from repro.launch.mesh import make_local_mesh
+from repro.models.api import build_model
+from repro.optim.optimizers import make_optimizer
+
+
+class FakeMesh:
+    """Shape-only stand-in for a 16x16 production mesh (no devices)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _plan(arch, shape_name, mesh=MESH):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    api = build_model(cfg)         # mesh=None: shapes only, no shard_map
+    param_sds = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    if shape.mode == "train":
+        opt = make_optimizer(cfg.optimizer)
+        opt_sds = jax.eval_shape(opt.init, param_sds)
+    else:
+        opt_sds = {}
+    cache_sds = None
+    if shape.mode == "decode":
+        cache_sds = jax.eval_shape(
+            lambda: api.init_cache(shape.global_batch, shape.seq_len))
+    return cfg, plan_sharding(cfg, shape, mesh, param_sds, opt_sds,
+                              cache_shapes=cache_sds), param_sds
+
+
+def _check_divisible(spec_tree, shape_tree, mesh):
+    flat_s = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))[0]
+    flat_l = jax.tree_util.tree_flatten(shape_tree)[0]
+    for spec, leaf in zip(flat_s, flat_l):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = math.prod(mesh.shape[a] for a in axes)
+            assert dim % size == 0, (spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ["internlm2-20b", "gemma2-2b",
+                                  "qwen2.5-3b", "qwen2-moe-a2.7b",
+                                  "kimi-k2-1t-a32b", "mamba2-1.3b",
+                                  "zamba2-1.2b"])
+def test_param_specs_divisible(arch):
+    cfg, plan, param_sds = _plan(arch, "train_4k")
+    _check_divisible(plan.param_specs, param_sds, MESH)
+
+
+def test_gemma2_heads_force_replicated_attention():
+    cfg, plan, _ = _plan("gemma2-2b", "train_4k")
+    assert not plan.attn_sharded          # 8 heads % 16 != 0
+
+
+def test_internlm_heads_shardable():
+    cfg, plan, _ = _plan("internlm2-20b", "train_4k")
+    assert plan.attn_sharded
+
+
+def test_kimi_fits_hbm_only_with_adafactor():
+    cfg, plan, _ = _plan("kimi-k2-1t-a32b", "train_4k", MESH3)
+    assert cfg.optimizer == "adafactor"
+    assert plan.hbm_gb_per_chip < 16.0    # the validity check passes
+    assert plan.zero_opt                  # ZeRO is required to fit
+
+
+def test_zero_shards_optimizer_state_over_data():
+    cfg, plan, _ = _plan("yi-6b", "train_4k")
+    if not plan.zero_opt:
+        pytest.skip("planner chose non-zero plan")
+    found_data = False
+    flat = jax.tree_util.tree_flatten(
+        plan.opt_specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for spec in flat:
+        for entry in tuple(spec):
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            if "data" in axes:
+                found_data = True
+    assert found_data
+
+
+def test_decode_cache_never_replicated_large():
+    cfg, plan, _ = _plan("gemma2-2b", "decode_32k")
+    k_spec = plan.cache_specs["k"]
+    assert "model" in jax.tree_util.tree_leaves(
+        [e for e in tuple(k_spec)], is_leaf=lambda x: True) or \
+        any(e == "model" or (isinstance(e, tuple) and "model" in e)
+            for e in tuple(k_spec))
+
+
+def test_plan_notes_record_candidates():
+    _, plan, _ = _plan("yi-6b", "train_4k")
+    assert len(plan.notes) >= 2           # >1 candidate was considered
+    assert any("zero=True" in n for n in plan.notes)
+    assert any("zero=False" in n for n in plan.notes)

@@ -1,0 +1,77 @@
+"""Checkpoint roundtrip, atomicity, retention, resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+
+
+def _tree(key):
+    ks = jax.random.split(key, 3)
+    return {"layer": {"w": jax.random.normal(ks[0], (8, 4)),
+                      "b": jax.random.normal(ks[1], (4,))},
+            "head": jax.random.normal(ks[2], (4, 16)).astype(jnp.bfloat16)}
+
+
+def test_roundtrip(tmp_path):
+    params = _tree(jax.random.PRNGKey(0))
+    opt = {"m": jax.tree_util.tree_map(jnp.zeros_like, params),
+           "step": jnp.asarray(7)}
+    path = ckpt.save(str(tmp_path), 7, params, opt, extra={"loss": 1.5})
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+    p2, o2, man = ckpt.restore(str(tmp_path), params, opt)
+    assert man["step"] == 7 and man["extra"]["loss"] == 1.5
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_retention_gc(tmp_path):
+    params = _tree(jax.random.PRNGKey(1))
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, params, {"step": jnp.asarray(s)},
+                  keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+
+def test_no_tmp_left_behind_on_failure(tmp_path):
+    params = _tree(jax.random.PRNGKey(2))
+
+    class Boom:
+        def __iter__(self):
+            raise RuntimeError("disk full")
+    with pytest.raises(Exception):
+        ckpt.save(str(tmp_path), 0, params, Boom())
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    params = _tree(jax.random.PRNGKey(3))
+    ckpt.save(str(tmp_path), 1, params, {"step": jnp.asarray(1)})
+    bad_template = {"layer": {"w": jnp.zeros((9, 4)), "b": jnp.zeros((4,))},
+                    "head": jnp.zeros((4, 16), jnp.bfloat16)}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), bad_template, {"step": jnp.asarray(0)})
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 6))
+def test_property_roundtrip_random_trees(depth, width):
+    import tempfile
+    tmpd = tempfile.mkdtemp(prefix="ckpt_prop_")
+    tmp = tmpd
+    rng = np.random.default_rng(depth * 10 + width)
+    tree = {f"k{i}": np.asarray(rng.standard_normal((width, depth)),
+                                np.float32)
+            for i in range(depth)}
+    ckpt.save(str(tmp), 0, tree, {"s": np.asarray(0)})
+    t2, _, _ = ckpt.restore(str(tmp), tree, {"s": np.asarray(0)})
+    for k in tree:
+        np.testing.assert_array_equal(tree[k], t2[k])

@@ -1,0 +1,74 @@
+"""Detailed cost model invariants."""
+import pytest
+
+from repro.core.cost_model import combine_segment, evaluate_layer
+from repro.core.directives import LayerScheme, LevelBlocking
+from repro.core.solver import Constraints, solve_intra_layer
+from repro.hw.presets import eyeriss_multinode, tpu_like_edge
+from repro.workloads.layers import conv, fc
+
+
+HW = eyeriss_multinode()
+
+
+def test_capacity_violation_detected():
+    layer = fc("f", 64, 4096, 4096)
+    lvls = [LevelBlocking(t={"C": 4096, "K": 4096}), LevelBlocking(),
+            LevelBlocking(t={"N": 64})]
+    cost = evaluate_layer(LayerScheme(layer, lvls), HW)
+    assert not cost.valid
+    assert "overflow" in cost.reason
+
+
+def test_factor_mismatch_detected():
+    layer = fc("f", 64, 128, 128)
+    lvls = [LevelBlocking(), LevelBlocking(), LevelBlocking(t={"N": 32})]
+    cost = evaluate_layer(LayerScheme(layer, lvls), HW)
+    assert not cost.valid
+
+
+def test_solved_scheme_valid_and_positive():
+    layer = conv("c", 64, 96, 256, 27, 27, 5, 5)
+    sch, cost = solve_intra_layer(layer, HW)
+    assert cost.valid
+    assert cost.energy_pj > 0 and cost.latency_cycles > 0
+    assert cost.pes_used <= HW.num_pes_per_node
+    assert cost.nodes_used <= HW.num_nodes
+    # energy components sum to the total
+    total = (cost.mac_energy + cost.regf_energy + cost.gbuf_energy +
+             cost.noc_energy + cost.dram_energy)
+    assert cost.energy_pj == pytest.approx(total)
+
+
+def test_more_nodes_never_hurts_latency():
+    layer = conv("c", 64, 96, 256, 27, 27, 5, 5)
+    _, c_small = solve_intra_layer(layer, HW, Constraints(nodes=(4, 4)))
+    _, c_big = solve_intra_layer(layer, HW, Constraints(nodes=(16, 16)))
+    assert c_big.latency_cycles <= c_small.latency_cycles * 1.05
+
+
+def test_onchip_forwarding_saves_dram():
+    layer = conv("c", 64, 96, 256, 27, 27, 5, 5)
+    sch, _ = solve_intra_layer(layer, HW)
+    off = evaluate_layer(sch, HW)
+    on = evaluate_layer(sch, HW, src_onchip=True, dst_onchip=True)
+    assert on.dram_traffic_bytes < off.dram_traffic_bytes
+    assert on.dram_energy < off.dram_energy
+
+
+def test_combine_segment_pipeline_fill():
+    layer = fc("f", 64, 512, 512)
+    sch, cost = solve_intra_layer(layer, HW, Constraints(nodes=(16, 8)))
+    seg2 = combine_segment([cost, cost], granules=64)
+    assert seg2.energy_pj == pytest.approx(2 * cost.energy_pj)
+    # pipelined latency < serial sum, > single layer
+    assert cost.latency_cycles < seg2.latency_cycles
+    assert seg2.latency_cycles < 2 * cost.latency_cycles
+
+
+def test_edge_hw_template():
+    layer = conv("c", 1, 64, 128, 28, 28, 3, 3)
+    sch, cost = solve_intra_layer(layer, tpu_like_edge(),
+                                  Constraints(nodes=(1, 1)))
+    assert cost.valid
+    assert cost.pes_used <= 256

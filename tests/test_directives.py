@@ -1,0 +1,125 @@
+"""Directive representation: footprints, parallelism, access counts."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.directives import (LayerScheme, LevelBlocking,
+                                   canonical_orders, divisors,
+                                   smallest_prime_factor)
+from repro.workloads.layers import conv, fc
+
+
+def simple_scheme(layer, t0=None, s0=None, t1=None, s1=None, t2=None):
+    lv0 = LevelBlocking(t=t0 or {}, s=s0 or {})
+    lv1 = LevelBlocking(t=t1 or {}, s=s1 or {})
+    lv2 = LevelBlocking(t=t2 or {})
+    return LayerScheme(layer, [lv0, lv1, lv2])
+
+
+def test_divisors():
+    assert divisors(12) == [1, 2, 3, 4, 6, 12]
+    assert divisors(1) == [1]
+    assert divisors(13) == [1, 13]
+
+
+def test_smallest_prime_factor():
+    assert smallest_prime_factor(12) == 2
+    assert smallest_prime_factor(35) == 5
+    assert smallest_prime_factor(13) == 13
+    assert smallest_prime_factor(1) == 1
+
+
+def test_canonical_orders_unique():
+    orders = canonical_orders()
+    assert len(orders) == 6
+    assert len(set(orders)) == 6
+    for o in orders:
+        assert set(o) == {"N", "C", "K", "X", "Y"}
+
+
+def test_fc_footprints():
+    layer = fc("f", 8, 16, 32)
+    sch = simple_scheme(layer, t0={"N": 2, "C": 4},
+                        t1={"N": 4, "C": 4, "K": 8}, t2={"K": 4})
+    assert sch.validate_factors()
+    # level 0 tile: I = 2*4 = 8; W = 4*1... K at level0 = 1
+    assert sch.tile_elems("I", 0) == 8
+    assert sch.tile_elems("W", 0) == 4
+    assert sch.tile_elems("O", 0) == 2
+    # level 1 tile: cumfactors N=8, C=16, K=8
+    assert sch.tile_elems("I", 1) == 8 * 16
+    assert sch.tile_elems("W", 1) == 16 * 8
+    assert sch.tile_elems("O", 1) == 8 * 8
+
+
+def test_spatial_sharding_reduces_tile():
+    layer = fc("f", 8, 16, 32)
+    sch = simple_scheme(layer, s1={"K": 4}, t1={"N": 8, "C": 16, "K": 8})
+    # W tile at level 1 excludes its own spatial factor
+    assert sch.tile_elems("W", 1) == 16 * 8
+    assert sch.parallelism(1) == 4
+    # replication: I doesn't contain K => replicated across the 4 nodes
+    assert sch.replication("I", 1) == 4
+    assert sch.replication("W", 1) == 1
+
+
+def test_fetch_counts_order_dependence():
+    layer = fc("f", 4, 8, 16)
+    # all blocking at DRAM level; order decides refetches into GBUF
+    lvls = [LevelBlocking(), LevelBlocking(),
+            LevelBlocking(t={"N": 4, "C": 8, "K": 16},
+                          order=("K", "C", "N"))]
+    sch = LayerScheme(layer, lvls)
+    # I (N,C): innermost relevant loop is N (innermost) -> full product
+    assert sch.fetches_into("I", 1) == 1 * (16 * 8 * 4)
+    # W (C,K): innermost relevant is C; trailing irrelevant N reused
+    assert sch.fetches_into("W", 1) == 1 * (16 * 8)
+    # O (N,K) with reduction C outside => partial-sum rw
+    rounds_rel = 16 * 8 * 4   # innermost relevant N
+    assert sch.fetches_into("O", 1) == pytest.approx(2 * rounds_rel -
+                                                     rounds_rel)
+
+
+@settings(max_examples=200, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), c=st.sampled_from([4, 12, 16]),
+       k=st.sampled_from([8, 16]), data=st.data())
+def test_property_factor_conservation(n, c, k, data):
+    """Any valid split keeps allocated == total and tile products sane."""
+    layer = fc("f", n, c, k)
+    def split(total):
+        d0 = data.draw(st.sampled_from(divisors(total)))
+        d1 = data.draw(st.sampled_from(divisors(total // d0)))
+        return d0, d1, total // d0 // d1
+    tn, tc, tk = split(n), split(c), split(k)
+    sch = simple_scheme(layer,
+                        t0={"N": tn[0], "C": tc[0], "K": tk[0]},
+                        t1={"N": tn[1], "C": tc[1], "K": tk[1]},
+                        t2={"N": tn[2], "C": tc[2], "K": tk[2]})
+    assert sch.validate_factors()
+    # tensor tiles never exceed full tensor sizes
+    for t in layer.tensors:
+        for lvl in range(3):
+            assert sch.tile_elems(t, lvl) <= layer.tensor_size(t) + 1e-9
+    # fetches into a level are at least the data once
+    for t in layer.tensors:
+        assert sch.fetches_into(t, 1) >= sch.tile_elems(t, 1) - 1e-9
+
+
+def test_to_directives_roundtrip_sizes():
+    layer = conv("c", 4, 8, 16, 14, 14, 3, 3)
+    sch = simple_scheme(layer, t0={"X": 7}, s0={"Y": 7},
+                        t1={"C": 8, "X": 2, "Y": 2}, s1={"K": 4},
+                        t2={"N": 4, "K": 4})
+    assert sch.validate_factors()
+    dirs = sch.to_directives(["REGF", "GBUF", "DRAM"])
+    assert len(dirs) == 3
+    text = "\n".join(str(d) for d in dirs)
+    assert "stack(" in text and "update(" in text and "tensor{" in text
+
+
+def test_top_level_granularity():
+    layer = fc("f", 8, 16, 32)
+    sch = simple_scheme(layer, t1={"N": 8, "C": 16, "K": 32})
+    g = sch.top_level_granularity()
+    assert g == {"K": 32, "N": 8}

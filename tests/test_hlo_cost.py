@@ -1,0 +1,82 @@
+"""HLO cost model: while-loop trip accounting, dot flops, collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloCostModel, analyze_hlo
+from repro.launch.roofline import collective_bytes
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_vs_unrolled_flops_agree():
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+
+    def scanned(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+
+    def unrolled(x, ws):
+        h = x
+        for i in range(8):
+            h = jnp.tanh(h @ ws[i])
+        return h
+
+    fs = analyze_hlo(_compile(scanned, x, ws).as_text()).flops
+    fu = analyze_hlo(_compile(unrolled, x, ws).as_text()).flops
+    expected = 2 * 128 * 256 * 256 * 8
+    assert abs(fs - expected) / expected < 0.02
+    assert abs(fs - fu) / fu < 0.02
+
+
+def test_xla_cost_analysis_undercounts_scan():
+    """Documents WHY hlo_cost exists."""
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+
+    def scanned(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+
+    c = _compile(scanned, x, ws)
+    xla_flops = c.cost_analysis().get("flops", 0)
+    ours = analyze_hlo(c.as_text()).flops
+    assert ours > 5 * xla_flops           # 8 trips vs 1
+
+
+def test_dot_flops_exact_single():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = _compile(lambda a, b: a @ b, a, b)
+    flops = analyze_hlo(c.as_text()).flops
+    assert flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_nested_scans_multiply():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def nested(x):
+        def outer(h, _):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ h2), None
+            h, _ = jax.lax.scan(inner, h, None, length=4)
+            return h, None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    flops = analyze_hlo(_compile(nested, x).as_text()).flops
+    expected = 2 * 32 * 32 * 32 * 12      # 3 x 4 dots
+    assert abs(flops - expected) / expected < 0.05
+
+
+def test_bytes_reasonable_for_elementwise():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = _compile(lambda x: x + 1.0, x)
+    b = analyze_hlo(c.as_text()).bytes
+    # read + write = 8 MiB; allow generous slack for copies
+    assert 4e6 < b < 4e7

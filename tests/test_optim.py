@@ -1,0 +1,80 @@
+"""Optimizers + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compression import (compress, decompress, ef_round,
+                                     init_error, wire_bytes_saved)
+from repro.optim.optimizers import (adafactor, adamw, clip_by_global_norm,
+                                    global_norm, make_optimizer)
+
+
+def quad_loss(params):
+    return sum(jnp.sum(jnp.square(p - 3.0))
+               for p in jax.tree_util.tree_leaves(params))
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizer_reduces_loss(opt_name):
+    opt = make_optimizer(opt_name, lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+    state = opt.init(params)
+    losses = []
+    for _ in range(60):
+        loss, grads = jax.value_and_grad(quad_loss)(params)
+        params, state = opt.update(grads, state, params)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.2
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((16,))}
+    state = opt.init(params)
+    assert state["f"]["w"]["vr"].shape == (64,)
+    assert state["f"]["w"]["vc"].shape == (32,)
+    assert state["f"]["b"]["v"].shape == (16,)
+    # factored state is much smaller than the params
+    n_state = sum(x.size for x in jax.tree_util.tree_leaves(state["f"]))
+    n_param = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert n_state < n_param * 0.2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    small = {"a": jnp.full((4,), 0.01)}
+    out = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(small["a"]), rtol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100), min_size=1, max_size=32))
+def test_compression_bounded_error(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = compress(x)
+    back = decompress(q, s)
+    assert np.max(np.abs(np.asarray(back) - np.asarray(x))) <= \
+        float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_converges():
+    """EF accumulates what quantization drops: the *sum* of dequantized
+    grads over steps tracks the sum of true grads."""
+    g = {"w": jnp.full((16,), 0.003)}
+    err = init_error(g)
+    total = np.zeros((16,), np.float32)
+    for _ in range(100):
+        deq, err = ef_round(g, err)
+        total += np.asarray(deq["w"], np.float32)
+    np.testing.assert_allclose(total, 0.3 * np.ones(16), rtol=0.05)
+
+
+def test_wire_bytes_saved():
+    g = {"w": jnp.zeros((1000,))}
+    bf16, int8 = wire_bytes_saved(g)
+    assert bf16 == 2000 and int8 < bf16

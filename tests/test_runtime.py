@@ -1,0 +1,106 @@
+"""Fault tolerance, elastic rescale, straggler mitigation."""
+import time
+
+import pytest
+
+from repro.runtime.fault import (ElasticPlanner, NodeFailure, RecoveryPolicy,
+                                 RecoveryStats, StepHeartbeat,
+                                 run_with_recovery)
+from repro.runtime.straggler import BackupDispatcher, StragglerDetector
+
+
+def test_recovery_restores_and_retries():
+    done = []
+    fails = {"n": 0}
+
+    def step(i):
+        if i == 3 and fails["n"] < 2:
+            fails["n"] += 1
+            raise NodeFailure("chip lost")
+        done.append(i)
+
+    restores = []
+    def restore():
+        restores.append(1)
+        return 2                      # resume from checkpointed step 2
+
+    stats = run_with_recovery(step, 0, 6, restore,
+                              policy=RecoveryPolicy(backoff_seconds=0),
+                              sleep=lambda s: None)
+    assert stats.restarts == 2
+    assert done[-1] == 5
+    assert 3 in done
+
+
+def test_recovery_gives_up_after_max_retries():
+    def step(i):
+        raise NodeFailure("persistent")
+    with pytest.raises(NodeFailure):
+        run_with_recovery(step, 0, 3, lambda: 0,
+                          policy=RecoveryPolicy(max_retries=2,
+                                                backoff_seconds=0),
+                          sleep=lambda s: None)
+
+
+def test_permanent_loss_triggers_reshard():
+    calls = []
+    state = {"failed": False}
+
+    def step(i):
+        if i == 1 and not state["failed"]:
+            state["failed"] = True
+            raise NodeFailure("host down", lost_devices=16, permanent=True)
+
+    stats = run_with_recovery(step, 0, 3, lambda: 0,
+                              policy=RecoveryPolicy(backoff_seconds=0),
+                              on_permanent_loss=lambda n: calls.append(n),
+                              sleep=lambda s: None)
+    assert calls == [16]
+    assert stats.reshards == 1
+
+
+def test_elastic_planner_keeps_tp_groups():
+    ep = ElasticPlanner(model_axis=16)
+    data, model = ep.plan(512 - 16)       # one host of 16 chips lost
+    assert model == 16
+    assert data == 16                      # 31 groups -> pow2 floor 16
+    data2, _ = ep.plan(256)
+    assert data2 == 16
+    with pytest.raises(NodeFailure):
+        ep.plan(8)
+
+
+def test_elastic_batch_rescale():
+    ep = ElasticPlanner(model_axis=16)
+    assert ep.batch_for(256, 8, 16) == 128   # per-replica batch preserved
+
+
+def test_straggler_detector():
+    d = StragglerDetector(factor=1.5, warmup=3)
+    for _ in range(5):
+        for h in ("a", "b", "c"):
+            d.record(h, 1.0)
+        d.record("slow", 3.0)
+    assert d.stragglers() == ["slow"]
+
+
+def test_heartbeat_deadline():
+    t = {"now": 0.0}
+    hb = StepHeartbeat(deadline_seconds=10, clock=lambda: t["now"])
+    hb.arm()
+    t["now"] = 5.0
+    hb.check()                             # fine
+    t["now"] = 11.0
+    with pytest.raises(NodeFailure):
+        hb.check()
+
+
+def test_backup_dispatcher_prefers_fast_backup():
+    bd = BackupDispatcher(deadline_seconds=0.05)
+    def slow():
+        time.sleep(1.0)
+        return "slow"
+    def fast():
+        return "fast"
+    assert bd.run(slow, fast) == "fast"
+    bd.close()

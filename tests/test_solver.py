@@ -1,0 +1,114 @@
+"""KAPLA solver behaviour: validity, optimality vs exhaustive, pruning."""
+import pytest
+
+from repro.core.solver import (Constraints, dp_prioritize,
+                               enumerate_segments, solve, solve_intra_layer)
+from repro.core.solver import annealing, exhaustive, random_search
+from repro.core.solver.interlayer import PruneStats
+from repro.hw.presets import eyeriss_multinode, tpu_like_edge
+from repro.workloads.nets import get_net
+from repro.workloads.layers import conv, fc
+
+HW = eyeriss_multinode()
+
+
+def test_intra_layer_always_valid_by_construction():
+    for layer in [conv("c", 64, 96, 256, 27, 27, 5, 5),
+                  conv("d", 64, 3, 96, 55, 55, 11, 11, stride=4),
+                  fc("f", 64, 4096, 1000)]:
+        sch, cost = solve_intra_layer(layer, HW)
+        assert cost.valid, (layer.name, cost.reason)
+        for lvl in range(2):
+            assert sch.level_footprint_bytes(lvl) <= \
+                HW.levels[lvl].capacity_bytes + 1e-6
+
+
+def test_kapla_close_to_exhaustive_on_mlp():
+    """The paper's core claim: near-optimal energy, orders faster."""
+    net = get_net("mlp", batch=64)
+    k = solve(net, HW)
+    s = exhaustive.solve(net, HW, budget_per_layer=800)
+    assert k.valid and s.valid
+    overhead = k.total_energy_pj / s.total_energy_pj - 1.0
+    assert overhead < 0.10, f"KAPLA {overhead:.1%} over exhaustive"
+    assert k.solve_seconds < s.solve_seconds
+
+
+def test_kapla_beats_random_and_annealing_on_mlp():
+    net = get_net("mlp", batch=64)
+    k = solve(net, HW)
+    r = random_search.solve(net, HW, samples=400)
+    m = annealing.solve(net, HW, iters=8, batch=8)
+    assert k.total_energy_pj <= r.total_energy_pj * 1.001
+    assert k.total_energy_pj <= m.total_energy_pj * 1.001
+
+
+@pytest.mark.parametrize("name", ["alexnet", "mlp", "lstm", "mobilenet"])
+def test_kapla_solves_all_nets(name):
+    net = get_net(name, batch=64)
+    res = solve(net, HW)
+    assert res.valid
+    assert set(res.layer_schemes) == {l.name for l in net.layers}
+    # every per-layer cost is individually valid
+    for c in res.layer_costs.values():
+        assert c.valid
+
+
+def test_training_graph_solvable():
+    net = get_net("alexnet", batch=64, training=True)
+    assert len(net) > len(get_net("alexnet"))
+    res = solve(net, HW)
+    assert res.valid
+
+
+def test_conservative_pruning_never_rejects_valid():
+    """Every chain the DP produces must be solvable in detail (modulo the
+    documented pipelining fallback)."""
+    net = get_net("mlp", batch=64)
+    stats = PruneStats()
+    chains = dp_prioritize(net, HW, k_s=4, stats=stats)
+    assert stats.total >= stats.after_validity >= 0
+    assert chains, "no chains survived"
+    res = solve(net, HW)
+    assert res.valid
+
+
+def test_pruning_stats_populated():
+    net = get_net("alexnet", batch=64)
+    res = solve(net, HW)
+    st = res.prune_stats
+    assert st.total > 0
+    assert st.after_pareto <= st.after_validity <= st.total
+
+
+def test_k_s_monotone_quality():
+    net = get_net("lstm", batch=64)
+    e = {}
+    for ks in (1, 4):
+        e[ks] = solve(net, HW, k_s=ks).total_energy_pj
+    assert e[4] <= e[1] * 1.001   # more candidates never hurt
+
+
+def test_edge_device_inference():
+    edge = tpu_like_edge()
+    net = get_net("alexnet", batch=1)
+    res = solve(net, edge)
+    assert res.valid
+    for c in res.layer_costs.values():
+        assert c.nodes_used == 1
+
+
+def test_segment_alloc_covers_grid():
+    net = get_net("mlp", batch=64)
+    segs = enumerate_segments(net, HW, 0, max_len=4)
+    for s in segs:
+        assert len(s.alloc) == s.length
+        cols = sum(a[1] for a in s.alloc)
+        assert cols <= HW.node_array[1]
+
+
+def test_objective_perf_vs_energy():
+    net = get_net("mlp", batch=64)
+    e = solve(net, HW, objective="energy")
+    p = solve(net, HW, objective="perf")
+    assert p.total_latency_cycles <= e.total_latency_cycles * 1.05
