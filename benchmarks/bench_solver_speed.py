@@ -1,0 +1,133 @@
+"""Solver-speed benchmark: batched cost model vs scalar judge + end-to-end
+solve times, emitted as a JSON perf record to track the repo's bench
+trajectory.
+
+    python benchmarks/bench_solver_speed.py [--quick] [--out perf.json]
+
+Record shape:
+    {
+      "cost_model": {"schemes_scored": N, "scalar_schemes_per_sec": ...,
+                     "batched_schemes_per_sec": ..., "speedup": ...},
+      "solve": {"<net>": {"cold_seconds": ..., "warm_seconds": ...,
+                          "energy_pj": ...}},
+      "quick": bool
+    }
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.cost_batch import FactorTable, evaluate_batch   # noqa: E402
+from repro.core.cost_model import evaluate_layer                # noqa: E402
+from repro.core.solver import memo, solve                       # noqa: E402
+from repro.core.solver.exhaustive import iter_scheme_tables     # noqa: E402
+from repro.core.solver.intralayer import Constraints            # noqa: E402
+from repro.hw.presets import eyeriss_multinode                  # noqa: E402
+from repro.workloads.layers import conv                         # noqa: E402
+from repro.workloads.nets import get_net                        # noqa: E402
+
+
+def bench_cost_model(hw, n_schemes: int) -> dict:
+    """Score the same candidate set scalar (one evaluate_layer call per
+    scheme) and batched (vectorized), compare throughput.
+
+    Candidates are the capacity-surviving lanes of the exhaustive
+    enumeration — the actual solver workload (fully scored by both paths,
+    no early-exit shortcuts for the scalar side)."""
+    layer = conv("bench", 64, 96, 256, 27, 27, 5, 5)
+    constr = Constraints(nodes=hw.node_array)
+    tables = []
+    lanes = 0
+    for ft in iter_scheme_tables(layer, hw, constr, budget=10000):
+        tables.append(ft)
+        lanes += ft.batch
+        if lanes >= n_schemes:
+            break
+    schemes = [ft.scheme_at(b) for ft in tables for b in range(ft.batch)]
+
+    t0 = time.perf_counter()
+    scalar = [evaluate_layer(s, hw, nodes_assigned=constr.num_nodes)
+              for s in schemes]
+    t_scalar = time.perf_counter() - t0
+
+    evaluate_batch(tables[0], hw, nodes_assigned=constr.num_nodes)  # warmup
+    t0 = time.perf_counter()
+    results = [evaluate_batch(ft, hw, nodes_assigned=constr.num_nodes)
+               for ft in tables]
+    t_batch = time.perf_counter() - t0
+
+    i = 0
+    for res in results:
+        for b in range(len(res)):
+            assert scalar[i].valid == bool(res.valid[b]), \
+                "batched/scalar validity disagreement"
+            i += 1
+    return {
+        "schemes_scored": lanes,
+        "scalar_schemes_per_sec": lanes / t_scalar,
+        "batched_schemes_per_sec": lanes / t_batch,
+        "speedup": t_scalar / t_batch,
+    }
+
+
+def bench_solve(hw, nets, batch: int) -> dict:
+    out = {}
+    for name in nets:
+        net = get_net(name, batch=batch)
+        memo.clear_all()
+        t0 = time.perf_counter()
+        cold = solve(net, hw)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm = solve(net, hw)
+        warm_s = time.perf_counter() - t0
+        assert warm.total_energy_pj == cold.total_energy_pj
+        out[name] = {"cold_seconds": cold_s, "warm_seconds": warm_s,
+                     "energy_pj": cold.total_energy_pj,
+                     "latency_cycles": cold.total_latency_cycles}
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sample counts / one net (CI smoke)")
+    ap.add_argument("--out", default=None, help="write JSON record here "
+                    "(always printed to stdout)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit nonzero if batched/scalar speedup is below "
+                    "this (regression gate)")
+    args = ap.parse_args(argv)
+
+    hw = eyeriss_multinode()
+    n_schemes = 2000 if args.quick else 20000
+    nets = ["mlp"] if args.quick else ["mlp", "alexnet", "lstm", "mobilenet"]
+
+    record = {
+        "quick": args.quick,
+        "hw": hw.name,
+        "cost_model": bench_cost_model(hw, n_schemes),
+        "solve": bench_solve(hw, nets, batch=64),
+        "memo": memo.stats(),
+    }
+    text = json.dumps(record, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if args.min_speedup is not None and \
+            record["cost_model"]["speedup"] < args.min_speedup:
+        print(f"FAIL: speedup {record['cost_model']['speedup']:.1f}x < "
+              f"{args.min_speedup}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

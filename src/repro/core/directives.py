@@ -25,6 +25,8 @@ nn-dataflow/Interstellar):
 from __future__ import annotations
 
 import dataclasses
+import functools
+import itertools
 import math
 from typing import Dict, FrozenSet, List, Mapping, Optional, Sequence, Tuple
 
@@ -269,6 +271,25 @@ class LayerScheme:
                                        tuple(stacks), tuple(updates)))
         return out
 
+    # -- factor-table export --------------------------------------------------
+    def factor_rows(self, dims: Sequence[str], tensor_names: Sequence[str],
+                    order_packer) -> Tuple[List[List[int]], List[List[int]],
+                                           List[List[int]], List[List[bool]],
+                                           List[List[int]]]:
+        """Flatten this scheme into per-level integer rows for batched
+        scoring: (t, s, order indices, order mask, shr) — one row per level.
+        ``order_packer`` maps a loop-order tuple to (dim indices, mask) of
+        length ``len(dims)`` (see ``cost_batch.pack_order``)."""
+        t_rows, s_rows, o_rows, m_rows, shr_rows = [], [], [], [], []
+        for lv in self.levels:
+            t_rows.append([lv.tf(d) for d in dims])
+            s_rows.append([lv.sf(d) for d in dims])
+            idx, mask = order_packer(lv.order)
+            o_rows.append(list(idx))
+            m_rows.append(list(mask))
+            shr_rows.append([int(lv.shr.get(t, 1)) for t in tensor_names])
+        return t_rows, s_rows, o_rows, m_rows, shr_rows
+
     def top_level_granularity(self) -> Dict[str, int]:
         """Tile sizes of the output tensor at the outermost on-chip level —
         used to check inter-layer forwarding compatibility (matched tensor
@@ -283,7 +304,8 @@ class LayerScheme:
 # ---------------------------------------------------------------------------
 
 
-def divisors(n: int) -> List[int]:
+@functools.lru_cache(maxsize=None)
+def _divisors_cached(n: int) -> Tuple[int, ...]:
     out = []
     i = 1
     while i * i <= n:
@@ -292,9 +314,16 @@ def divisors(n: int) -> List[int]:
             if i != n // i:
                 out.append(n // i)
         i += 1
-    return sorted(out)
+    return tuple(sorted(out))
 
 
+def divisors(n: int) -> List[int]:
+    """Sorted divisors of ``n`` (memoized; a fresh list is returned so
+    callers may mutate it)."""
+    return list(_divisors_cached(n))
+
+
+@functools.lru_cache(maxsize=None)
 def smallest_prime_factor(n: int) -> int:
     if n <= 1:
         return 1
@@ -306,10 +335,8 @@ def smallest_prime_factor(n: int) -> int:
     return n
 
 
-def canonical_orders() -> List[Tuple[str, ...]]:
-    """Loop orders that matter: permutations of which tensor class is
-    outermost; X, Y travel with N (fmap dims)."""
-    import itertools
+@functools.lru_cache(maxsize=1)
+def _canonical_orders_cached() -> Tuple[Tuple[str, ...], ...]:
     orders = []
     for perm in itertools.permutations(("C", "K", "N")):
         order: List[str] = []
@@ -319,4 +346,10 @@ def canonical_orders() -> List[Tuple[str, ...]]:
             else:
                 order.append(p)
         orders.append(tuple(order))
-    return orders
+    return tuple(orders)
+
+
+def canonical_orders() -> List[Tuple[str, ...]]:
+    """Loop orders that matter: permutations of which tensor class is
+    outermost; X, Y travel with N (fmap dims)."""
+    return list(_canonical_orders_cached())

@@ -1,10 +1,10 @@
-from . import annealing, exhaustive, random_search
+from . import annealing, exhaustive, memo, random_search
 from .interlayer import Chain, PruneStats, dp_prioritize, enumerate_segments
 from .intralayer import Constraints, solve_intra_layer
 from .kapla import NetworkSchedule, solve
 
 __all__ = [
     "Chain", "Constraints", "NetworkSchedule", "PruneStats", "annealing",
-    "dp_prioritize", "enumerate_segments", "exhaustive", "random_search",
-    "solve", "solve_intra_layer",
+    "dp_prioritize", "enumerate_segments", "exhaustive", "memo",
+    "random_search", "solve", "solve_intra_layer",
 ]

@@ -16,6 +16,7 @@ from typing import Dict, List, Optional, Tuple
 
 from ...hw.template import HWTemplate
 from ...workloads.layers import DIMS, LayerGraph, LayerSpec
+from ..cost_batch import score_schemes
 from ..cost_model import CostBreakdown, combine_segment, evaluate_layer, invalid
 from ..directives import LayerScheme, canonical_orders, divisors
 from .interlayer import dp_prioritize, io_flags, _consumer_map
@@ -100,11 +101,15 @@ def solve_layer_annealing(layer: LayerSpec, hw: HWTemplate,
         if surrogate.w is not None:
             cands.sort(key=lambda s: surrogate.predict(_features(s)))
         n_eval = max(1, int(len(cands) * eval_frac))
-        for scheme in cands[:n_eval]:
-            cost = evaluate_layer(scheme, hw,
-                                  nodes_assigned=constr.num_nodes,
-                                  src_onchip=constr.src_onchip,
-                                  dst_onchip=constr.dst_onchip)
+        # detailed-model scoring of the surrogate-selected top fraction is
+        # one vectorized batch; the SA walk below consumes the results in
+        # the original order so the rng stream is untouched
+        res = score_schemes(cands[:n_eval], hw,
+                            nodes_assigned=constr.num_nodes,
+                            src_onchip=constr.src_onchip,
+                            dst_onchip=constr.dst_onchip)
+        for bi, scheme in enumerate(cands[:n_eval]):
+            cost = res.breakdown(bi)
             y = math.log1p(cost.energy_pj) if cost.valid else 60.0
             surrogate.add(_features(scheme), y)
             if not cost.valid:

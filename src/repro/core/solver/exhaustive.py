@@ -1,8 +1,11 @@
 """Baseline S: exhaustive search over the directive scheme space (§V).
 
 Enumerates, per layer: node-parallel spatial splits, per-level temporal
-factorizations (divisor ladders with early capacity pruning), loop orders and
-sharing toggles — every candidate scored with the detailed cost model.
+factorizations (divisor ladders), loop orders and sharing toggles.  The
+enumeration is *batched*: temporal combos are generated directly as flat
+factor tables (mixed-radix index decoding, no per-candidate ``LayerScheme``
+or dict copies), capacity-pruned in-array, expanded with the order/sharing
+variants, and scored with the vectorized cost model in large chunks.
 A ``budget`` caps the enumeration for very large layers (reported when hit);
 within budget the search is exhaustive over the same space KAPLA navigates.
 """
@@ -13,13 +16,20 @@ import itertools
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from ...hw.template import HWTemplate
 from ...workloads.layers import DIMS, LayerGraph, LayerSpec
+from ..cost_batch import FactorTable, evaluate_batch, pack_order
 from ..cost_model import CostBreakdown, combine_segment, evaluate_layer, invalid
 from ..directives import (LayerScheme, LevelBlocking, canonical_orders,
                           divisors)
 from .interlayer import io_flags, _consumer_map
 from .intralayer import Constraints, _pe_axis_dims, solve_intra_layer
+from .memo import exhaustive_cache, solve_key
+
+# expanded (temporal-combo x order/shr-variant) lanes scored per numpy call
+_MAX_LANES = 65536
 
 
 def _axis_splits(total: int, budget: int) -> List[int]:
@@ -27,13 +37,13 @@ def _axis_splits(total: int, budget: int) -> List[int]:
     return [f for f in divisors(total) if f <= budget]
 
 
-def enumerate_intra_schemes(layer: LayerSpec, hw: HWTemplate,
-                            constr: Constraints,
-                            budget: int = 50000) -> Iterator[LayerScheme]:
-    """Yield candidate schemes; early-prunes on per-level capacity."""
-    n_levels = len(hw.levels)
+def _spatial_blocks(layer: LayerSpec, hw: HWTemplate, constr: Constraints,
+                    ) -> Tuple[List[Dict[str, int]], List[Dict[str, int]]]:
+    """PE-level and node-level spatial unrolling options, seeded with
+    KAPLA's own stacking point so the exhaustive space is a superset of what
+    the fast solver reaches (the directive space is shared; only the walk
+    differs)."""
     pe_axes = _pe_axis_dims(hw)
-    # PE-level spatial: one dim per axis (hardware-constrained patterns)
     pe_opts: List[Dict[str, int]] = []
     for d0 in list(pe_axes[0]) + [None]:
         for d1 in list(pe_axes[1]) + [None]:
@@ -49,7 +59,6 @@ def enumerate_intra_schemes(layer: LayerSpec, hw: HWTemplate,
                     if d1 and f1 > 1:
                         s[d1] = f1
                     pe_opts.append(s)
-    # node-level spatial: up to two dims across the assigned region
     node_opts: List[Dict[str, int]] = [{}]
     H, W = constr.nodes
     for d0, d1 in itertools.permutations(DIMS, 2):
@@ -66,88 +75,184 @@ def enumerate_intra_schemes(layer: LayerSpec, hw: HWTemplate,
             seen_nodes.add(key)
             node_uniq.append(o)
 
-    # seed the spatial option lists with KAPLA's own stacking point so the
-    # exhaustive space is a superset of what the fast solver reaches (the
-    # directive space is shared; only the walk differs)
     seed, _ = solve_intra_layer(layer, hw, constr)
     if seed is not None:
         pe_opts.insert(0, {d: f for d, f in seed.levels[0].s.items() if f > 1})
         node_uniq.insert(0,
                          {d: f for d, f in seed.levels[1].s.items() if f > 1})
+    return pe_opts, node_uniq
 
-    count = 0
+
+def _order_shr_variants(layer: LayerSpec, hw: HWTemplate,
+                        constr: Constraints, node_s: Dict[str, int],
+                        ) -> List[Tuple[Tuple[str, ...], Tuple[str, ...],
+                                        Dict[str, int]]]:
+    """(o_mid, o_top, shr) cross product for one node-spatial block, in the
+    same iteration order as the historical scalar enumeration."""
     orders = canonical_orders()
+    shr_opts: List[Dict[str, int]] = [{}]
+    if hw.levels[-1].same_level_transfer:
+        for tname, rel in layer.tensors.items():
+            repl = 1
+            for d, f in node_s.items():
+                if d not in rel:
+                    repl *= f
+            if repl > 1:
+                shr_opts.append({tname: repl})
+    out = []
+    for o_mid, o_top, shr in itertools.product(orders, orders, shr_opts):
+        if constr.outer_dims and \
+                o_top[: len(constr.outer_dims)] != tuple(constr.outer_dims):
+            continue
+        out.append((o_mid, o_top, shr))
+    return out
+
+
+def _footprint_mask(layer: LayerSpec, hw: HWTemplate, t: np.ndarray,
+                    s_col: np.ndarray) -> np.ndarray:
+    """Early capacity pruning at REGF and GBUF, vectorized over the combo
+    axis (shr = 1 at this stage, mirroring the scalar enumeration which
+    pruned before applying sharing toggles)."""
+    cum = np.cumprod(t * s_col[:, :, None], axis=0)       # [L, ND, C]
+    ratio = cum / s_col[:, :, None]
+    mask = np.ones(t.shape[-1], dtype=bool)
+    for level in (0, 1):
+        fp = np.zeros(t.shape[-1])
+        for tname, rel in layer.tensors.items():
+            relvec = np.array([d in rel for d in DIMS])
+            tl = np.prod(np.where(relvec[:, None], ratio[level], 1.0), axis=0)
+            unit = layer.inner_unit(tname) if level == 0 \
+                else layer.unit.get(tname, 1.0)
+            fp += tl * unit
+        mask &= fp * layer.bytes_per_elem <= hw.levels[level].capacity_bytes
+    return mask
+
+
+def iter_scheme_tables(layer: LayerSpec, hw: HWTemplate,
+                       constr: Constraints,
+                       budget: int = 50000) -> Iterator[FactorTable]:
+    """Yield capacity-pruned candidate batches as factor tables.
+
+    Covers the same candidate space as the historical per-scheme generator:
+    each yielded table is (surviving temporal combos) x (order/shr variants)
+    for one spatial block, combo-major / variant-minor."""
+    n_levels = len(hw.levels)
+    if n_levels < 3:
+        raise ValueError("exhaustive table enumeration needs >= 3 levels")
+    pe_opts, node_uniq = _spatial_blocks(layer, hw, constr)
+    remaining = budget
     for pe_s in pe_opts:
         for node_s in node_uniq:
-            # temporal factors: for each dim, split leftover across
-            # REGF / GBUF / DRAM as (t0, t1, rest) over divisors
+            if remaining <= 0:
+                return
             leftover = {}
             for d in DIMS:
                 tot = layer.dim(d)
                 tot //= pe_s.get(d, 1) * node_s.get(d, 1)
                 leftover[d] = tot
-            per_dim_opts = []
+            # per-dim (t0, t1, t2) options as arrays
+            opts: List[np.ndarray] = []
             for d in DIMS:
-                opts = []
-                for t0 in divisors(leftover[d]):
-                    for t1 in divisors(leftover[d] // t0):
-                        opts.append((d, t0, t1, leftover[d] // t0 // t1))
-                per_dim_opts.append(opts)
-            for combo in itertools.product(*per_dim_opts):
-                count += 1
-                if count > budget:
-                    return
-                lv0 = LevelBlocking(s=dict(pe_s))
-                lv1 = LevelBlocking(s=dict(node_s))
-                lv2 = LevelBlocking()
-                for d, t0, t1, t2 in combo:
-                    if t0 > 1:
-                        lv0.t[d] = t0
-                    if t1 > 1:
-                        lv1.t[d] = t1
-                    if t2 > 1:
-                        lv2.t[d] = t2
-                scheme = LayerScheme(layer, [lv0, lv1, lv2])
-                # early capacity pruning, inner levels first
-                if scheme.level_footprint_bytes(0) > hw.levels[0].capacity_bytes:
+                o = [(t0, t1, leftover[d] // t0 // t1)
+                     for t0 in divisors(leftover[d])
+                     for t1 in divisors(leftover[d] // t0)]
+                opts.append(np.asarray(o, dtype=np.int64))
+            radix = [len(o) for o in opts]
+            n_combos = int(np.prod(radix))
+            take = min(n_combos, remaining)
+            remaining -= take
+
+            variants = _order_shr_variants(layer, hw, constr, node_s)
+            if not variants:
+                continue
+            V = len(variants)
+            # pre-pack the per-variant order/shr columns [levels, ., V]
+            tnames = list(layer.tensors)
+            var_order = np.empty((n_levels, len(DIMS), V), dtype=np.int8)
+            var_omask = np.empty((n_levels, len(DIMS), V), dtype=bool)
+            d_idx, d_mask = pack_order(LevelBlocking().order)
+            var_order[:] = np.asarray(d_idx, dtype=np.int8)[None, :, None]
+            var_omask[:] = np.asarray(d_mask)[None, :, None]
+            var_shr = np.ones((n_levels, len(tnames), V), dtype=np.int64)
+            for v, (o_mid, o_top, shr) in enumerate(variants):
+                for lvl, o in ((1, o_mid), (n_levels - 1, o_top)):
+                    idx, msk = pack_order(o)
+                    var_order[lvl, :, v] = idx
+                    var_omask[lvl, :, v] = msk
+                for tname, f in shr.items():
+                    var_shr[1, tnames.index(tname), v] = f
+
+            s_col = np.ones((n_levels, len(DIMS)), dtype=np.int64)
+            for d, f in pe_s.items():
+                s_col[0, DIMS.index(d)] = f
+            for d, f in node_s.items():
+                s_col[1, DIMS.index(d)] = f
+
+            chunk = max(1, _MAX_LANES // max(1, V))
+            strides = np.ones(len(DIMS), dtype=np.int64)
+            for i in range(len(DIMS) - 2, -1, -1):
+                strides[i] = strides[i + 1] * radix[i + 1]
+            done = 0
+            while done < take:
+                c = min(chunk, take - done)
+                lin = np.arange(done, done + c, dtype=np.int64)
+                done += c
+                t = np.ones((n_levels, len(DIMS), c), dtype=np.int64)
+                for di in range(len(DIMS)):
+                    digits = (lin // strides[di]) % radix[di]
+                    picked = opts[di][digits]            # [c, 3]
+                    t[0, di] = picked[:, 0]
+                    t[1, di] = picked[:, 1]
+                    t[2, di] = picked[:, 2]
+                keep = _footprint_mask(layer, hw, t, s_col)
+                S = int(keep.sum())
+                if S == 0:
                     continue
-                if scheme.level_footprint_bytes(1) > hw.levels[1].capacity_bytes:
-                    continue
-                shr_opts: List[Dict[str, int]] = [{}]
-                if hw.levels[-1].same_level_transfer:
-                    for tname, rel in layer.tensors.items():
-                        repl = 1
-                        for d, f in lv1.s.items():
-                            if d not in rel:
-                                repl *= f
-                        if repl > 1:
-                            shr_opts.append({tname: repl})
-                for o_mid, o_top, shr in itertools.product(orders, orders,
-                                                           shr_opts):
-                    lv1o = lv1.copy()
-                    lv2o = lv2.copy()
-                    lv1o.order, lv2o.order = o_mid, o_top
-                    lv1o.shr = dict(shr)
-                    if constr.outer_dims and \
-                            o_top[: len(constr.outer_dims)] != constr.outer_dims:
-                        continue
-                    yield LayerScheme(layer, [lv0.copy(), lv1o, lv2o])
+                t = t[:, :, keep]
+                # expand combos x variants, combo-major
+                B = S * V
+                ft = FactorTable(
+                    layer,
+                    t=np.repeat(t, V, axis=2),
+                    s=np.repeat(s_col[:, :, None], B, axis=2),
+                    order=np.tile(var_order, (1, 1, S)),
+                    omask=np.tile(var_omask, (1, 1, S)),
+                    shr=np.tile(var_shr, (1, 1, S)))
+                yield ft
+
+
+def enumerate_intra_schemes(layer: LayerSpec, hw: HWTemplate,
+                            constr: Constraints,
+                            budget: int = 50000) -> Iterator[LayerScheme]:
+    """Compatibility wrapper: materialize each table lane as a
+    ``LayerScheme`` (prefer ``iter_scheme_tables`` + ``evaluate_batch``)."""
+    for ft in iter_scheme_tables(layer, hw, constr, budget):
+        for b in range(ft.batch):
+            yield ft.scheme_at(b)
 
 
 def solve_layer_exhaustive(layer: LayerSpec, hw: HWTemplate,
                            constr: Optional[Constraints] = None,
-                           budget: int = 50000,
+                           budget: int = 50000, use_cache: bool = True,
                            ) -> Tuple[Optional[LayerScheme], CostBreakdown]:
     constr = constr or Constraints(nodes=hw.node_array)
+    key = solve_key(layer, hw, constr, extra=("budget", budget))
+    if use_cache:
+        hit = exhaustive_cache.get(key, layer)
+        if hit is not None:
+            return hit
     best: Tuple[Optional[LayerScheme], CostBreakdown] = (None, invalid("none"))
-    for scheme in enumerate_intra_schemes(layer, hw, constr, budget):
-        cost = evaluate_layer(scheme, hw, nodes_assigned=constr.num_nodes,
-                              src_onchip=constr.src_onchip,
-                              dst_onchip=constr.dst_onchip)
-        if cost.valid and cost.energy_pj < best[1].energy_pj:
-            best = (scheme, cost)
+    for ft in iter_scheme_tables(layer, hw, constr, budget):
+        res = evaluate_batch(ft, hw, nodes_assigned=constr.num_nodes,
+                             src_onchip=constr.src_onchip,
+                             dst_onchip=constr.dst_onchip)
+        bi = res.best("energy")
+        if bi >= 0 and res.energy_pj[bi] < best[1].energy_pj:
+            best = (ft.scheme_at(bi), res.breakdown(bi))
     if best[0] is None:     # budget exhausted before a valid point: fall back
-        return solve_intra_layer(layer, hw, constr)
+        best = solve_intra_layer(layer, hw, constr)
+    if use_cache:
+        exhaustive_cache.put(key, best[0], best[1])
     return best
 
 

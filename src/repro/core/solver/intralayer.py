@@ -19,9 +19,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ...hw.template import HWTemplate
 from ...workloads.layers import DIMS, LayerSpec
+from ..cost_batch import score_schemes
 from ..cost_model import CostBreakdown, evaluate_layer, invalid
 from ..directives import (LayerScheme, LevelBlocking, canonical_orders,
                           smallest_prime_factor)
+from .memo import intra_cache, solve_key
 
 
 @dataclasses.dataclass
@@ -56,7 +58,9 @@ def _helps(layer: LayerSpec, tname: str) -> List[str]:
     (dims NOT indexing the tensor; reduction dims for the output)."""
     rel = set(layer.tensors[tname])
     if tname == "O":
-        return [d for d in DIMS if d not in rel and layer.dim(d) > 1]
+        # partial-sum revisit traffic is driven by the reduction loops:
+        # keeping them inside the output's residency level is what helps
+        return [d for d in layer.reduction_dims if layer.dim(d) > 1]
     return [d for d in DIMS if d not in rel and layer.dim(d) > 1]
 
 
@@ -177,9 +181,18 @@ def _order_candidates(constr: Constraints) -> List[Tuple[str, ...]]:
 
 def solve_intra_layer(layer: LayerSpec, hw: HWTemplate,
                       constr: Optional[Constraints] = None,
+                      use_cache: bool = True,
                       ) -> Tuple[Optional[LayerScheme], CostBreakdown]:
-    """Algorithm 1: returns (best scheme, its detailed cost)."""
+    """Algorithm 1: returns (best scheme, its detailed cost).
+
+    Results are memoized on the canonical layer signature + hardware
+    fingerprint + constraints (``use_cache=False`` forces a cold solve)."""
     constr = constr or Constraints(nodes=hw.node_array)
+    key = solve_key(layer, hw, constr)
+    if use_cache:
+        hit = intra_cache.get(key, layer)
+        if hit is not None:
+            return hit
     n_levels = len(hw.levels)
     st = _State(layer, n_levels)
 
@@ -205,10 +218,15 @@ def solve_intra_layer(layer: LayerSpec, hw: HWTemplate,
                 top.t[d] = 1
         cap = hw.levels[-2].capacity_bytes
         if st.scheme.level_footprint_bytes(n_levels - 2) > cap:
-            return None, invalid("cannot keep reduction on-chip")
+            bad = invalid("cannot keep reduction on-chip")
+            if use_cache:
+                intra_cache.put(key, None, bad)
+            return None, bad
 
     # ---- enumerate loop orders (GBUF x DRAM) and sharing toggles ------------
-    best: Tuple[Optional[LayerScheme], CostBreakdown] = (None, invalid("none"))
+    # The whole order x order x shr cross product is scored as ONE batch with
+    # the vectorized cost model; candidates share the greedy factors and only
+    # vary in order/shr, so they are packed without per-candidate dict copies.
     orders_top = _order_candidates(constr)
     orders_mid = canonical_orders()
     shr_opts: List[Dict[str, int]] = [{}]
@@ -217,16 +235,41 @@ def solve_intra_layer(layer: LayerSpec, hw: HWTemplate,
             repl = st.scheme.replication(tname, 1)
             if repl > 1:
                 shr_opts.append({tname: repl})
-    for o_top, o_mid, shr in itertools.product(orders_top, orders_mid,
-                                               shr_opts):
+    variants = list(itertools.product(orders_top, orders_mid, shr_opts))
+
+    def materialize(o_top, o_mid, shr) -> LayerScheme:
         cand_levels = [lv.copy() for lv in st.levels]
         cand_levels[-1].order = o_top
         cand_levels[1].order = o_mid
         cand_levels[1].shr = dict(shr)
-        cand = LayerScheme(layer, cand_levels)
-        cost = evaluate_layer(cand, hw, nodes_assigned=constr.num_nodes,
-                              src_onchip=constr.src_onchip,
-                              dst_onchip=constr.dst_onchip)
-        if cost.valid and cost.energy_pj < best[1].energy_pj:
-            best = (cand, cost)
+        return LayerScheme(layer, cand_levels)
+
+    best: Tuple[Optional[LayerScheme], CostBreakdown] = (None, invalid("none"))
+    if n_levels >= 3:
+        # zero-copy candidate views: levels share the greedy factor dicts,
+        # only order/shr differ; evaluation never mutates them
+        cands = [LayerScheme(layer, [
+            st.levels[0],
+            LevelBlocking(t=st.levels[1].t, s=st.levels[1].s,
+                          order=o_mid, shr=dict(shr)),
+            *st.levels[2:-1],
+            LevelBlocking(t=st.levels[-1].t, s=st.levels[-1].s,
+                          order=o_top)])
+            for o_top, o_mid, shr in variants]
+        res = score_schemes(cands, hw, nodes_assigned=constr.num_nodes,
+                            src_onchip=constr.src_onchip,
+                            dst_onchip=constr.dst_onchip)
+        bi = res.best("energy")
+        if bi >= 0:
+            best = (materialize(*variants[bi]), res.breakdown(bi))
+    else:
+        for o_top, o_mid, shr in variants:
+            cand = materialize(o_top, o_mid, shr)
+            cost = evaluate_layer(cand, hw, nodes_assigned=constr.num_nodes,
+                                  src_onchip=constr.src_onchip,
+                                  dst_onchip=constr.dst_onchip)
+            if cost.valid and cost.energy_pj < best[1].energy_pj:
+                best = (cand, cost)
+    if use_cache:
+        intra_cache.put(key, best[0], best[1])
     return best

@@ -76,6 +76,7 @@ def solve_segment(graph: LayerGraph, hw: HWTemplate, seg, consumers,
 
 def _solve_chain(graph: LayerGraph, hw: HWTemplate, chain: Chain,
                  layer_solver=solve_intra_layer,
+                 seg_cache: Optional[Dict] = None,
                  ) -> Tuple[float, float, Dict[str, LayerScheme],
                             Dict[str, CostBreakdown]]:
     consumers = _consumer_map(graph)
@@ -84,8 +85,16 @@ def _solve_chain(graph: LayerGraph, hw: HWTemplate, chain: Chain,
     schemes: Dict[str, LayerScheme] = {}
     costs: Dict[str, CostBreakdown] = {}
     for seg in chain.segments:
-        seg_total, seg_schemes, seg_costs = solve_segment(
-            graph, hw, seg, consumers, layer_solver)
+        # k_S candidate chains share most of their segments: solve each
+        # distinct (range, alloc, granule) segment once per solve() call
+        key = (seg.start, seg.stop, seg.alloc, seg.granule_frac)
+        if seg_cache is not None and key in seg_cache:
+            seg_total, seg_schemes, seg_costs = seg_cache[key]
+        else:
+            seg_total, seg_schemes, seg_costs = solve_segment(
+                graph, hw, seg, consumers, layer_solver)
+            if seg_cache is not None:
+                seg_cache[key] = (seg_total, seg_schemes, seg_costs)
         if seg_total is None:
             return float("inf"), float("inf"), {}, {}
         schemes.update(seg_schemes)
@@ -104,8 +113,10 @@ def solve(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
                            objective=objective, stats=stats)
     best = NetworkSchedule(graph.name, None, {}, {}, float("inf"),
                            float("inf"), 0.0, stats)
+    seg_cache: Dict = {}
     for chain in chains:
-        e, lat, schemes, costs = _solve_chain(graph, hw, chain, layer_solver)
+        e, lat, schemes, costs = _solve_chain(graph, hw, chain, layer_solver,
+                                              seg_cache)
         score = e if objective == "energy" else e * lat \
             if objective == "edp" else lat
         best_score = best.total_energy_pj if objective == "energy" else \

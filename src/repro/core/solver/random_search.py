@@ -11,6 +11,7 @@ from typing import Dict, Optional, Tuple
 
 from ...hw.template import HWTemplate
 from ...workloads.layers import DIMS, LayerGraph, LayerSpec
+from ..cost_batch import score_schemes
 from ..cost_model import CostBreakdown, combine_segment, evaluate_layer, invalid
 from ..directives import (LayerScheme, LevelBlocking, canonical_orders,
                           divisors)
@@ -67,15 +68,19 @@ def solve_layer_random(layer: LayerSpec, hw: HWTemplate,
     constr = constr or Constraints(nodes=hw.node_array)
     rng = random.Random(seed ^ hash(layer.name) & 0xFFFF)
     best: Tuple[Optional[LayerScheme], CostBreakdown] = (None, invalid("none"))
+    sampled = []
     for _ in range(samples):
         if rng.random() > p:
             continue                      # candidate skipped
-        scheme = _random_scheme(layer, hw, constr, rng)
-        cost = evaluate_layer(scheme, hw, nodes_assigned=constr.num_nodes,
-                              src_onchip=constr.src_onchip,
-                              dst_onchip=constr.dst_onchip)
-        if cost.valid and cost.energy_pj < best[1].energy_pj:
-            best = (scheme, cost)
+        sampled.append(_random_scheme(layer, hw, constr, rng))
+    if sampled:
+        # score the whole sample set as one vectorized batch
+        res = score_schemes(sampled, hw, nodes_assigned=constr.num_nodes,
+                            src_onchip=constr.src_onchip,
+                            dst_onchip=constr.dst_onchip)
+        bi = res.best("energy")
+        if bi >= 0:
+            best = (sampled[bi], res.breakdown(bi))
     if best[0] is None:
         return solve_intra_layer(layer, hw, constr)
     return best

@@ -11,6 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Optional, Tuple
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class MemLevel:
@@ -83,10 +85,15 @@ class HWTemplate:
     def total_pes(self) -> int:
         return self.num_pes_per_node * self.num_nodes
 
-    def avg_noc_hops(self, nodes_used: int) -> float:
-        """Mean Manhattan hop count within a roughly-square region."""
-        side = max(1.0, nodes_used ** 0.5)
-        return 2.0 * side / 3.0
+    def avg_noc_hops(self, nodes_used):
+        """Mean Manhattan hop count within a roughly-square region.
+
+        Accepts a scalar or an array of node counts (the batched cost model
+        scores many candidates at once) — keep this the single definition of
+        the NoC hop formula for both the scalar and vectorized judges."""
+        side = np.maximum(1.0, np.asarray(nodes_used, dtype=float) ** 0.5)
+        hops = 2.0 * side / 3.0
+        return float(hops) if np.ndim(nodes_used) == 0 else hops
 
     def with_(self, **updates) -> "HWTemplate":
         return dataclasses.replace(self, **updates)

@@ -1,0 +1,248 @@
+"""Batched cost model parity with the scalar judge + memoization behavior."""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # degrade: property tests skip, rest run
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core.cost_batch import (FactorTable, evaluate_batch, pack_order,
+                                   score_schemes)
+from repro.core.cost_model import evaluate_layer
+from repro.core.directives import (LayerScheme, LevelBlocking,
+                                   canonical_orders, divisors)
+from repro.core.solver import memo, solve
+from repro.core.solver.exhaustive import solve_layer_exhaustive
+from repro.core.solver.intralayer import Constraints, solve_intra_layer
+from repro.core.solver.random_search import _random_scheme
+from repro.hw.presets import eyeriss_multinode, tpu_like_edge
+from repro.workloads.layers import backward_weight, conv, dwconv, fc
+from repro.workloads.nets import get_net
+
+HW = eyeriss_multinode()
+RTOL = 1e-6
+
+SCALAR_FIELDS = ("energy_pj", "latency_cycles", "mac_energy", "regf_energy",
+                 "gbuf_energy", "noc_energy", "dram_energy",
+                 "dram_traffic_bytes", "gbuf_traffic_bytes")
+
+
+def assert_parity(schemes, hw, constr, src_onchip=False, dst_onchip=False):
+    res = score_schemes(schemes, hw, nodes_assigned=constr.num_nodes,
+                        src_onchip=src_onchip, dst_onchip=dst_onchip)
+    n_valid = 0
+    for i, sch in enumerate(schemes):
+        ref = evaluate_layer(sch, hw, nodes_assigned=constr.num_nodes,
+                             src_onchip=src_onchip, dst_onchip=dst_onchip)
+        assert ref.valid == bool(res.valid[i]), (i, ref.reason)
+        if not ref.valid:
+            continue
+        n_valid += 1
+        for f in SCALAR_FIELDS:
+            a, b = getattr(ref, f), float(getattr(res, f)[i])
+            assert a == pytest.approx(b, rel=RTOL, abs=1e-9), (i, f)
+        assert ref.pes_used == int(res.pes_used[i])
+        assert ref.nodes_used == int(res.nodes_used[i])
+    return n_valid
+
+
+def shr_variants(schemes):
+    """Toggle node-level sharing on a copy of each scheme where possible."""
+    out = []
+    for sch in schemes:
+        for t in sch.layer.tensors:
+            if sch.replication(t, 1) > 1:
+                lv = [l.copy() for l in sch.levels]
+                lv[1].shr = {t: sch.replication(t, 1)}
+                out.append(LayerScheme(sch.layer, lv))
+                break
+    return out
+
+
+LAYERS = [conv("c", 64, 96, 256, 27, 27, 5, 5),
+          fc("f", 64, 4096, 1000),
+          dwconv("d", 64, 128, 28, 28, 3, 3),
+          backward_weight(conv("cb", 8, 32, 64, 14, 14, 3, 3))]
+
+
+@pytest.mark.parametrize("layer", LAYERS, ids=lambda l: l.name)
+@pytest.mark.parametrize("onchip", [(False, False), (True, True)])
+def test_batch_matches_scalar_on_random_schemes(layer, onchip):
+    rng = random.Random(42)
+    constr = Constraints(nodes=HW.node_array)
+    schemes = [_random_scheme(layer, HW, constr, rng) for _ in range(150)]
+    schemes += shr_variants(schemes[:40])
+    n_valid = assert_parity(schemes, HW, constr, *onchip)
+    assert n_valid > 0, "sample produced no valid scheme to compare"
+
+
+def test_batch_matches_scalar_on_edge_hw():
+    edge = tpu_like_edge()
+    rng = random.Random(7)
+    constr = Constraints(nodes=(1, 1))
+    layer = conv("c", 1, 64, 128, 28, 28, 3, 3)
+    schemes = [_random_scheme(layer, edge, constr, rng) for _ in range(100)]
+    assert assert_parity(schemes, edge, constr) > 0
+
+
+def test_batch_matches_scalar_on_solver_orders():
+    """The exact candidate family the intra-layer solver batches: shared
+    factors, varying loop orders at GBUF/DRAM."""
+    layer = conv("c", 64, 96, 256, 27, 27, 5, 5)
+    constr = Constraints(nodes=HW.node_array)
+    base, _ = solve_intra_layer(layer, HW, constr)
+    schemes = []
+    for o_top in canonical_orders():
+        for o_mid in canonical_orders():
+            lv = [l.copy() for l in base.levels]
+            lv[-1].order = o_top
+            lv[1].order = o_mid
+            schemes.append(LayerScheme(layer, lv))
+    n_valid = assert_parity(schemes, HW, constr)
+    assert n_valid == len(schemes)
+
+
+def test_invalid_flagged_consistently():
+    layer = fc("f", 64, 4096, 4096)
+    overflow = LayerScheme(layer, [LevelBlocking(t={"C": 4096, "K": 4096}),
+                                   LevelBlocking(),
+                                   LevelBlocking(t={"N": 64})])
+    mismatch = LayerScheme(layer, [LevelBlocking(), LevelBlocking(),
+                                   LevelBlocking(t={"N": 32})])
+    res = score_schemes([overflow, mismatch], HW)
+    assert not res.valid.any()
+    assert res.energy_pj[0] == float("inf")
+    assert res.best() == -1
+
+
+def test_factor_table_roundtrip():
+    rng = random.Random(3)
+    layer = LAYERS[0]
+    constr = Constraints(nodes=HW.node_array)
+    schemes = [_random_scheme(layer, HW, constr, rng) for _ in range(20)]
+    ft = FactorTable.from_schemes(schemes)
+    for i, sch in enumerate(schemes):
+        back = ft.scheme_at(i)
+        for lv_a, lv_b in zip(sch.levels, back.levels):
+            for d in "NCKXY":
+                assert lv_a.tf(d) == lv_b.tf(d)
+                assert lv_a.sf(d) == lv_b.sf(d)
+
+
+def test_pack_order_pads_missing_dims():
+    idx, mask = pack_order(("K", "C"))
+    assert len(idx) == 5 and len(mask) == 5
+    assert mask[:2] == (True, True) and not any(mask[2:])
+
+
+@settings(max_examples=150, deadline=None)
+@given(n=st.sampled_from([4, 8, 64]), c=st.sampled_from([4, 12, 96]),
+       k=st.sampled_from([8, 256]), data=st.data())
+def test_property_parity_random_blockings(n, c, k, data):
+    """Batched == scalar across random layers, blockings, orders, shr."""
+    layer = fc("f", n, c, k) if data.draw(st.booleans()) else \
+        conv("c", n, c, k, 14, 14, 3, 3)
+
+    def split(total):
+        d0 = data.draw(st.sampled_from(divisors(total)))
+        d1 = data.draw(st.sampled_from(divisors(total // d0)))
+        return d0, d1, total // d0 // d1
+
+    lvls = [LevelBlocking(), LevelBlocking(), LevelBlocking()]
+    for d in ("N", "C", "K", "X", "Y"):
+        f0, f1, f2 = split(layer.dim(d))
+        spatial = data.draw(st.booleans())
+        if spatial and f0 > 1:
+            lvls[0].s[d] = f0
+        elif f0 > 1:
+            lvls[0].t[d] = f0
+        if f1 > 1:
+            lvls[1].t[d] = f1
+        if f2 > 1:
+            lvls[2].t[d] = f2
+    orders = canonical_orders()
+    lvls[1].order = data.draw(st.sampled_from(orders))
+    lvls[2].order = data.draw(st.sampled_from(orders))
+    sch = LayerScheme(layer, lvls)
+    if data.draw(st.booleans()):
+        for t in layer.tensors:
+            if sch.replication(t, 1) > 1:
+                lvls[1].shr = {t: sch.replication(t, 1)}
+                break
+    constr = Constraints(nodes=HW.node_array)
+    assert_parity([sch], HW, constr,
+                  src_onchip=data.draw(st.booleans()),
+                  dst_onchip=data.draw(st.booleans()))
+
+
+# ---------------------------------------------------------------------------
+# memoization regressions
+# ---------------------------------------------------------------------------
+
+
+def test_layer_signature_cache_identical_to_cold_solve():
+    layer = conv("c", 64, 96, 256, 27, 27, 5, 5)
+    constr = Constraints(nodes=(8, 8))
+    memo.clear_all()
+    cold_sch, cold_cost = solve_intra_layer(layer, HW, constr)
+    warm_sch, warm_cost = solve_intra_layer(layer, HW, constr)
+    assert memo.intra_cache.hits >= 1
+    assert warm_cost.energy_pj == cold_cost.energy_pj
+    assert warm_cost.latency_cycles == cold_cost.latency_cycles
+    names = ["REGF", "GBUF", "DRAM"]
+    assert "\n".join(map(str, warm_sch.to_directives(names))) == \
+        "\n".join(map(str, cold_sch.to_directives(names)))
+    # cache entries are isolated: mutating a returned scheme or cost must
+    # not corrupt later hits
+    warm_sch.levels[0].t["N"] = 999
+    warm_cost.energy_pj = -1.0
+    again_sch, again_cost = solve_intra_layer(layer, HW, constr)
+    assert again_cost.energy_pj == cold_cost.energy_pj
+    assert again_sch.levels[0].tf("N") == cold_sch.levels[0].tf("N")
+
+
+def test_same_shape_layers_share_cache_entry():
+    """ResNet-style shape repetition: same shape under different names must
+    hit the same signature entry and yield the same schedule."""
+    memo.clear_all()
+    a = conv("block1", 16, 64, 64, 14, 14, 3, 3)
+    b = conv("block2", 16, 64, 64, 14, 14, 3, 3, src=["block1"])
+    sch_a, cost_a = solve_intra_layer(a, HW)
+    misses = memo.intra_cache.misses
+    sch_b, cost_b = solve_intra_layer(b, HW)
+    assert memo.intra_cache.misses == misses          # pure hit
+    assert cost_b.energy_pj == cost_a.energy_pj
+    assert sch_b.layer is b                           # re-bound to caller
+    names = ["REGF", "GBUF", "DRAM"]
+    assert "\n".join(map(str, sch_b.to_directives(names))) == \
+        "\n".join(map(str, sch_a.to_directives(names)))
+
+
+def test_exhaustive_solver_memoized_and_consistent():
+    layer = fc("f", 64, 512, 512)
+    constr = Constraints(nodes=HW.node_array)
+    memo.clear_all()
+    sch1, cost1 = solve_layer_exhaustive(layer, HW, constr, budget=200)
+    sch2, cost2 = solve_layer_exhaustive(layer, HW, constr, budget=200)
+    assert memo.exhaustive_cache.hits >= 1
+    assert cost2.energy_pj == cost1.energy_pj
+    cold_sch, cold_cost = solve_layer_exhaustive(layer, HW, constr,
+                                                 budget=200, use_cache=False)
+    assert cold_cost.energy_pj == cost1.energy_pj
+    # the best cost reported must equal the scalar judge on the scheme
+    ref = evaluate_layer(cold_sch, HW, nodes_assigned=constr.num_nodes)
+    assert ref.valid
+    assert ref.energy_pj == pytest.approx(cold_cost.energy_pj, rel=RTOL)
+
+
+def test_net_solve_unaffected_by_warm_cache():
+    net = get_net("mlp", batch=64)
+    memo.clear_all()
+    cold = solve(net, HW)
+    warm = solve(net, HW)
+    assert cold.valid and warm.valid
+    assert warm.total_energy_pj == cold.total_energy_pj
+    assert warm.total_latency_cycles == cold.total_latency_cycles
+    assert set(warm.layer_schemes) == set(cold.layer_schemes)

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # degrade: property tests skip, rest run
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.optim.compression import (compress, decompress, ef_round,
                                      init_error, wire_bytes_saved)
