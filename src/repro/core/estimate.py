@@ -78,6 +78,6 @@ def estimate_layer(layer: LayerSpec, hw: HWTemplate, nodes_assigned: int,
     pes = nodes_assigned * hw.num_pes_per_node
     lat = max(macs / max(1, pes),
               dram_bytes / hw.levels[-1].bandwidth_bytes_per_cycle /
-              max(1, 1))      # single DRAM port pool
+              max(1, hw.dram_ports))
     return LayerEstimate(True, energy_lb_pj=e, latency_lb_cycles=lat,
                          dram_bytes_lb=dram_bytes)

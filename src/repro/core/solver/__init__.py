@@ -1,10 +1,13 @@
 from . import annealing, exhaustive, memo, random_search
-from .interlayer import Chain, PruneStats, dp_prioritize, enumerate_segments
+from .interlayer import (Chain, PruneStats, dp_prioritize,
+                         dp_prioritize_scalar, enumerate_segments,
+                         enumerate_segments_scalar, segment_pool)
 from .intralayer import Constraints, solve_intra_layer
 from .kapla import NetworkSchedule, solve
 
 __all__ = [
     "Chain", "Constraints", "NetworkSchedule", "PruneStats", "annealing",
-    "dp_prioritize", "enumerate_segments", "exhaustive", "memo",
-    "random_search", "solve", "solve_intra_layer",
+    "dp_prioritize", "dp_prioritize_scalar", "enumerate_segments",
+    "enumerate_segments_scalar", "exhaustive", "memo", "random_search",
+    "segment_pool", "solve", "solve_intra_layer",
 ]

@@ -262,7 +262,7 @@ def solve(graph: LayerGraph, hw: HWTemplate, budget_per_layer: int = 50000,
     detail (no estimate-based pruning), then an exact DP over segmentation
     picks the globally optimal chain (optimal because detailed segment costs
     compose additively)."""
-    from .interlayer import enumerate_segments
+    from .interlayer import segment_pool
     from .kapla import NetworkSchedule, solve_segment
 
     t0 = time.perf_counter()
@@ -272,8 +272,10 @@ def solve(graph: LayerGraph, hw: HWTemplate, budget_per_layer: int = 50000,
     def layer_solver(layer, hw_, constr):
         return solve_layer_exhaustive(layer, hw_, constr, budget_per_layer)
 
-    seg_cands = {i: enumerate_segments(graph, hw, i, max_seg_len)
-                 for i in range(n)}
+    # narrow alloc family: every candidate here is detail-solved in full, so
+    # the widened 2-D region splits would blow up the exhaustive budget;
+    # one multi-start batched shot covers all start indices
+    seg_cands = segment_pool(graph, hw, range(n), max_seg_len, wide=False)
     INF = float("inf")
     best_cost = [INF] * (n + 1)
     best_prev: List[Optional[Tuple[int, float, Dict, Dict]]] = [None] * (n + 1)

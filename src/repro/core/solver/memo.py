@@ -14,6 +14,7 @@ Cached values store the scheme's levels detached from any particular
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Dict, Hashable, Optional, Tuple
 
 from ...hw.template import HWTemplate
@@ -61,11 +62,16 @@ class SolveCache:
 
     Schemes are stored as detached level lists and re-bound to the caller's
     layer on lookup; costs are copied so callers can never corrupt an entry.
+
+    Thread-safe: ``kapla.solve`` fans segment solves out to a thread pool,
+    so concurrent get/put on the same key must be benign (both threads
+    compute the same value; last put wins).
     """
 
     def __init__(self, max_entries: int = 4096):
         self.max_entries = max_entries
         self._store: Dict[Hashable, Tuple[Optional[list], CostBreakdown]] = {}
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
@@ -73,17 +79,22 @@ class SolveCache:
         return len(self._store)
 
     def clear(self) -> None:
-        self._store.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._store.clear()
+            self.hits = 0
+            self.misses = 0
 
     def get(self, key: Hashable, layer: LayerSpec
             ) -> Optional[Tuple[Optional[LayerScheme], CostBreakdown]]:
-        entry = self._store.get(key)
-        if entry is None:
-            self.misses += 1
-            return None
-        self.hits += 1
+        with self._lock:
+            entry = self._store.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+        # entries are never mutated after insertion, so the defensive
+        # copies can be built outside the lock (keeps the hit path of
+        # concurrent segment solves from serializing)
         levels, cost = entry
         scheme = None if levels is None else \
             LayerScheme(layer, [lv.copy() for lv in levels])
@@ -91,11 +102,12 @@ class SolveCache:
 
     def put(self, key: Hashable, scheme: Optional[LayerScheme],
             cost: CostBreakdown) -> None:
-        if len(self._store) >= self.max_entries:
-            self._store.clear()         # simple epoch eviction
         levels = None if scheme is None else [lv.copy()
                                               for lv in scheme.levels]
-        self._store[key] = (levels, dataclasses.replace(cost))
+        with self._lock:
+            if len(self._store) >= self.max_entries:
+                self._store.clear()         # simple epoch eviction
+            self._store[key] = (levels, dataclasses.replace(cost))
 
 
 # process-wide caches, one per solver family
@@ -105,14 +117,17 @@ exhaustive_cache = SolveCache()
 
 def clear_all() -> None:
     """Reset every process-wide solver cache, including the lru_cached pure
-    helpers, so 'cold' timings really are cold."""
+    helpers and the graph-attached pack / candidate-batch caches, so 'cold'
+    timings really are cold."""
     from .. import cost_batch, directives
+    from . import interlayer
     intra_cache.clear()
     exhaustive_cache.clear()
     directives._divisors_cached.cache_clear()
     directives.smallest_prime_factor.cache_clear()
     directives._canonical_orders_cached.cache_clear()
     cost_batch.pack_order.cache_clear()
+    interlayer.clear_graph_caches()
 
 
 def stats() -> Dict[str, Any]:

@@ -11,7 +11,8 @@ from .template import HWTemplate, MemLevel, TPUPodSpec
 
 
 def eyeriss_multinode(nodes: int = 16, pe: int = 8, regf_bytes: int = 64,
-                      gbuf_bytes: int = 32 * 1024) -> HWTemplate:
+                      gbuf_bytes: int = 32 * 1024,
+                      dram_ports: int = 1) -> HWTemplate:
     """16x16 nodes, each 8x8 PEs, 64 B REGF/PE, 32 kB GBUF/node (paper Fig 1).
 
     Row-stationary PE mapping, buffer sharing enabled at the node level.
@@ -28,7 +29,8 @@ def eyeriss_multinode(nodes: int = 16, pe: int = 8, regf_bytes: int = 64,
         mac_energy_pj=1.0,
         noc_hop_energy_pj_per_byte=0.61 * 8,
         freq_hz=500e6,
-        pe_dataflow="row_stationary")
+        pe_dataflow="row_stationary",
+        dram_ports=dram_ports)
 
 
 def tpu_like_edge() -> HWTemplate:

@@ -48,6 +48,11 @@ class HWTemplate:
     temporal_layer_pipe: bool = True
     spatial_layer_pipe: bool = True
     bytes_per_elem: int = 2
+    # independent DRAM channels/ports. Estimator-only: the optimistic
+    # lower bounds (estimate.py / estimate_batch.py) see an aggregate
+    # off-chip bandwidth of dram.bandwidth_bytes_per_cycle * dram_ports;
+    # the detailed judges keep modeling a single port pool.
+    dram_ports: int = 1
 
     def __post_init__(self) -> None:
         if self.pe_dataflow not in ("row_stationary", "systolic"):

@@ -176,6 +176,36 @@ def lstm(batch: int = 64, hidden: int = 512, steps: int = 8) -> LayerGraph:
     return LayerGraph("lstm", L)
 
 
+def transformer(batch: int = 64, layers: int = 12, d_model: int = 512,
+                d_ff: int = 2048) -> LayerGraph:
+    """Deep transformer-style layer graph built from fc/eltwise blocks.
+
+    Per block: a fused QKV projection, the attention output projection, a
+    residual add, the two FFN GEMMs, and a second residual add — six layers
+    per block, so the inter-layer DP (segment slicing across hundreds of
+    layers) dominates the solve on deep configs.  Attention score/context
+    matmuls are activation-activation products the generic layer model has
+    no tensor class for; the GEMM chain above carries the inter-layer
+    structure (long residual-linked pipelines) that the solver exercises.
+    """
+    L: List[LayerSpec] = []
+    prev = ""
+    for i in range(layers):
+        qkv, proj = f"b{i}.qkv", f"b{i}.proj"
+        add1, ff1, ff2, add2 = (f"b{i}.add1", f"b{i}.ff1", f"b{i}.ff2",
+                                f"b{i}.add2")
+        L.append(fc(qkv, batch, d_model, 3 * d_model,
+                    src=[prev] if prev else []))
+        L.append(fc(proj, batch, d_model, d_model, src=[qkv]))
+        L.append(eltwise(add1, batch, d_model, 1, 1,
+                         src=[proj, prev] if prev else [proj]))
+        L.append(fc(ff1, batch, d_model, d_ff, src=[add1]))
+        L.append(fc(ff2, batch, d_ff, d_model, src=[ff1]))
+        L.append(eltwise(add2, batch, d_model, 1, 1, src=[ff2, add1]))
+        prev = add2
+    return LayerGraph(f"transformer{layers}", L)
+
+
 NETS = {
     "alexnet": alexnet,
     "mobilenet": mobilenet,
@@ -184,6 +214,7 @@ NETS = {
     "resnet": resnet50,
     "mlp": mlp,
     "lstm": lstm,
+    "transformer": transformer,
 }
 
 

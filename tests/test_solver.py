@@ -101,10 +101,12 @@ def test_edge_device_inference():
 def test_segment_alloc_covers_grid():
     net = get_net("mlp", batch=64)
     segs = enumerate_segments(net, HW, 0, max_len=4)
+    H, W = HW.node_array
     for s in segs:
         assert len(s.alloc) == s.length
-        cols = sum(a[1] for a in s.alloc)
-        assert cols <= HW.node_array[1]
+        # regions (column strips, row strips, 2-D blocks) must fit the grid
+        assert sum(h * w for h, w in s.alloc) <= H * W
+        assert all(1 <= h <= H and 1 <= w <= W for h, w in s.alloc)
 
 
 def test_objective_perf_vs_energy():
