@@ -190,6 +190,29 @@ def bench_solve(hw, nets, batch: int) -> dict:
     return out
 
 
+def bench_calibration(quick: bool) -> dict:
+    """Solver -> lowering -> pallas execution -> measured-vs-predicted
+    calibration sweep (repro.lower.calibrate).  The full per-pair record is
+    written to BENCH_calibration.json next to BENCH_solver.json; the main
+    record keeps a summary."""
+    from repro.lower.calibrate import run_calibration, save_record
+    t0 = time.perf_counter()
+    rec = run_calibration(quick=quick, iters=1 if quick else 2)
+    rec["sweep_seconds"] = time.perf_counter() - t0
+    save_record(rec, os.path.join(REPO_ROOT, "BENCH_calibration.json"))
+    worst_err = max((p.get("rel_err", 0.0) for p in rec["pairs"]),
+                    default=float("inf"))
+    return {
+        "n_pairs": rec["n_pairs"],
+        "n_skipped": len(rec["skipped"]),
+        "spearman_raw": rec.get("spearman_raw"),
+        "spearman_calibrated": rec.get("spearman_calibrated"),
+        "worst_rel_err": worst_err,
+        "coefficients": rec.get("calibration"),
+        "sweep_seconds": rec["sweep_seconds"],
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -205,30 +228,75 @@ def main(argv=None) -> int:
     ap.add_argument("--max-transformer-seconds", type=float, default=None,
                     help="exit nonzero if the 48-block transformer cold "
                     "solve exceeds this time budget")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="also run the lowering/calibration sweep (writes "
+                    "BENCH_calibration.json)")
+    ap.add_argument("--calibrate-only", action="store_true",
+                    help="run ONLY the lowering/calibration sweep (the CI "
+                    "lowering smoke gate)")
+    ap.add_argument("--min-calibration-spearman", type=float, default=None,
+                    help="exit nonzero if predicted-vs-measured Spearman "
+                    "rank correlation is below this")
+    ap.add_argument("--min-calibration-pairs", type=int, default=None,
+                    help="exit nonzero if the calibration sweep produced "
+                    "fewer (scheme, layer) pairs than this")
     args = ap.parse_args(argv)
+    if args.calibrate_only and (args.min_speedup is not None
+                                or args.min_interlayer_speedup is not None
+                                or args.max_transformer_seconds is not None):
+        ap.error("--calibrate-only skips the solver benches; drop it or "
+                 "drop the solver gate flags")
 
     hw = eyeriss_multinode()
     n_schemes = 2000 if args.quick else 20000
     nets = ["mlp"] if args.quick else ["mlp", "alexnet", "lstm", "mobilenet"]
 
-    record = {
-        "quick": args.quick,
-        "hw": hw.name,
-        "cost_model": bench_cost_model(hw, n_schemes),
-        "interlayer": bench_interlayer(hw, args.quick),
-        "solve": bench_solve(hw, nets, batch=64),
-        "memo": memo.stats(),
-    }
+    if args.calibrate_only:
+        record = {"quick": args.quick,
+                  "calibration": bench_calibration(args.quick)}
+    else:
+        record = {
+            "quick": args.quick,
+            "hw": hw.name,
+            "cost_model": bench_cost_model(hw, n_schemes),
+            "interlayer": bench_interlayer(hw, args.quick),
+            "solve": bench_solve(hw, nets, batch=64),
+            "memo": memo.stats(),
+        }
+        if args.calibrate:
+            record["calibration"] = bench_calibration(args.quick)
     text = json.dumps(record, indent=2)
     print(text)
     # BENCH_solver.json at the repo root is the perf-trajectory record
-    for path in filter(None, [os.path.join(REPO_ROOT, "BENCH_solver.json"),
-                              args.out]):
+    # (kept intact by calibration-only runs, which have their own record)
+    paths = [args.out] if args.calibrate_only else \
+        [os.path.join(REPO_ROOT, "BENCH_solver.json"), args.out]
+    for path in filter(None, paths):
         with open(path, "w") as f:
             f.write(text + "\n")
 
-    il = record["interlayer"]
     fails = []
+    cal = record.get("calibration")
+    if args.min_calibration_spearman is not None:
+        if cal is None:
+            fails.append("calibration gate set but sweep did not run "
+                         "(pass --calibrate)")
+        elif cal["spearman_raw"] is None:
+            fails.append(f"calibration produced too few valid pairs "
+                         f"({cal['n_pairs']}) to compute spearman")
+        elif cal["spearman_raw"] < args.min_calibration_spearman:
+            fails.append(f"calibration spearman {cal['spearman_raw']:.3f} "
+                         f"< {args.min_calibration_spearman}")
+    if args.min_calibration_pairs is not None and cal is not None and \
+            cal["n_pairs"] < args.min_calibration_pairs:
+        fails.append(f"calibration pairs {cal['n_pairs']} < "
+                     f"{args.min_calibration_pairs}")
+    if args.calibrate_only:
+        for f_ in fails:
+            print("FAIL:", f_, file=sys.stderr)
+        return 1 if fails else 0
+
+    il = record["interlayer"]
     if not il["chain_costs_match"]:
         fails.append("inter-layer parity: batched chain costs != scalar")
     if args.min_speedup is not None and \

@@ -2,15 +2,24 @@
 """Quickstart: KAPLA schedules AlexNet on the 16x16-node Eyeriss-like
 accelerator and prints the winning tensor-centric directives (paper
 Listing-1 style), the energy/latency, and a comparison with random search.
+Then the winning scheme for one conv layer is LOWERED to a Pallas kernel
+plan and executed (interpret mode on CPU), printing predicted-vs-measured
+latency — the full solver -> silicon-facing pipeline in one script.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import sys
 
-sys.path.insert(0, "src")
+try:                     # installed package, or PYTHONPATH=src (see docs)
+    import repro         # noqa: F401
+except ImportError:      # fallback: resolve src/ relative to this file so
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                    "..", "src"))
 
 from repro.core.solver import random_search, solve
 from repro.hw.presets import eyeriss_multinode
+from repro.lower import lower_scheme, make_inputs, measure_plan, verify_plan
 from repro.workloads.nets import get_net
 
 
@@ -38,6 +47,24 @@ def main():
     rnd = random_search.solve(net, hw, samples=500)
     print(f"\nrandom search: {rnd.total_energy_pj / res.total_energy_pj:.2f}x"
           " KAPLA energy")
+
+    # --- lower the winning scheme for one layer and actually run it --------
+    # (batch 1 keeps the interpret-mode execution snappy on CPU)
+    edge = solve(get_net("alexnet", batch=1), hw)
+    plan = lower_scheme(edge.layer_schemes["conv3"], hw)
+    print(f"\n--- lowering conv3 (batch 1) to a Pallas plan ---")
+    print(plan.describe())
+    ok, err = verify_plan(plan)
+    print(f"numerics vs kernels/ref.py oracle: "
+          f"{'OK' if ok else 'MISMATCH'} (max rel err {err:.1e})")
+    measured = measure_plan(plan, make_inputs(plan), iters=2)
+    predicted = plan.predicted.latency_cycles / hw.freq_hz
+    print(f"predicted latency {predicted * 1e3:.3f} ms "
+          f"({plan.predicted.latency_cycles:.0f} cycles @ "
+          f"{hw.freq_hz / 1e6:.0f} MHz) | measured (interpret mode, jitted) "
+          f"{measured * 1e3:.3f} ms")
+    print("(interpret mode calibrates the model's *ranking*, not absolute "
+          "silicon time — see README 'Lowering & calibration')")
 
 
 if __name__ == "__main__":

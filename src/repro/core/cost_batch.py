@@ -184,6 +184,27 @@ class BatchResult:
             self.latency_cycles
         return int(np.argmin(score))
 
+    def predicted_seconds(self, macs: float, hw: HWTemplate,
+                          grid_steps=0, cal=None) -> np.ndarray:
+        """Vectorized ``cost_model.predicted_seconds`` over all lanes:
+        calibrated wall-clock predictions when a measured-runtime
+        ``Calibration`` is installed (see ``repro.lower.calibrate``),
+        otherwise raw cycles over the clock.  ``grid_steps`` may be a
+        scalar or a per-lane array.  Invalid lanes stay inf."""
+        from .cost_model import get_calibration
+        cal = cal if cal is not None else get_calibration()
+        if cal is None:
+            return self.latency_cycles / hw.freq_hz
+        thruput = np.maximum(1, self.pes_used * self.nodes_used)
+        sec = (cal.a_compute * macs / thruput
+               + cal.a_dram * self.dram_traffic_bytes
+               / hw.levels[-1].bandwidth_bytes_per_cycle
+               + cal.a_gbuf * self.gbuf_traffic_bytes
+               / hw.levels[1].bandwidth_bytes_per_cycle
+               + cal.a_step * np.asarray(grid_steps)
+               + cal.intercept)
+        return np.where(self.valid, sec, float("inf"))
+
 
 def _nest_arrays(ft: FactorTable, level: int
                  ) -> Tuple[np.ndarray, np.ndarray]:

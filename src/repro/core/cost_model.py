@@ -39,6 +39,94 @@ def invalid(reason: str) -> CostBreakdown:
     return CostBreakdown(valid=False, reason=reason)
 
 
+# ---------------------------------------------------------------------------
+# Measured-runtime calibration (fit by repro.lower.calibrate against real
+# kernel executions; optional — nothing in the solver path requires it).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-term scale coefficients mapping model cycle terms to measured
+    seconds:  seconds ~= a_compute*cyc_compute + a_dram*cyc_dram
+    + a_gbuf*cyc_gbuf + a_step*grid_steps + intercept.
+
+    Fitted by ``repro.lower.calibrate.fit_calibration`` from a sweep of
+    executed kernel plans; ``spearman`` records the rank correlation of the
+    *uncalibrated* model against the measurements it was fitted on."""
+
+    a_compute: float = 0.0
+    a_dram: float = 0.0
+    a_gbuf: float = 0.0
+    a_step: float = 0.0
+    intercept: float = 0.0
+    spearman: float = 0.0
+    n_pairs: int = 0
+
+    def to_json_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json_dict(d: Dict) -> "Calibration":
+        fields = {f.name for f in dataclasses.fields(Calibration)}
+        return Calibration(**{k: v for k, v in d.items() if k in fields})
+
+
+_calibration: Optional[Calibration] = None
+
+
+def set_calibration(cal: Optional[Calibration]) -> None:
+    """Install (or clear, with None) the process-wide calibration used by
+    ``predicted_seconds``.  The cycle-level model and all parity paths are
+    unaffected — calibration only rescales cycles into wall seconds."""
+    global _calibration
+    _calibration = cal
+
+
+def get_calibration() -> Optional[Calibration]:
+    return _calibration
+
+
+def load_calibration(path: str) -> Calibration:
+    import json
+    with open(path) as f:
+        d = json.load(f)
+    cal = Calibration.from_json_dict(d.get("calibration", d))
+    set_calibration(cal)
+    return cal
+
+
+def cycle_terms(cb: "CostBreakdown", macs: float, hw: HWTemplate
+                ) -> Dict[str, float]:
+    """Recover the roofline's component cycle counts from a breakdown (the
+    stored ``latency_cycles`` keeps only their max)."""
+    thruput = max(1, cb.pes_used * cb.nodes_used)
+    return {
+        "cyc_compute": macs / thruput,
+        "cyc_dram": cb.dram_traffic_bytes
+        / hw.levels[-1].bandwidth_bytes_per_cycle,
+        "cyc_gbuf": cb.gbuf_traffic_bytes
+        / hw.levels[1].bandwidth_bytes_per_cycle,
+    }
+
+
+def predicted_seconds(cb: "CostBreakdown", macs: float, hw: HWTemplate,
+                      grid_steps: int = 0,
+                      cal: Optional[Calibration] = None) -> float:
+    """Wall-clock latency prediction: calibrated when a ``Calibration`` is
+    installed (or passed), otherwise raw cycles over the clock.  Invalid
+    breakdowns predict inf (mirroring the batched path's valid-lane mask)."""
+    if not cb.valid:
+        return float("inf")
+    cal = cal if cal is not None else _calibration
+    if cal is None:
+        return cb.latency_cycles / hw.freq_hz
+    t = cycle_terms(cb, macs, hw)
+    return (cal.a_compute * t["cyc_compute"] + cal.a_dram * t["cyc_dram"]
+            + cal.a_gbuf * t["cyc_gbuf"] + cal.a_step * grid_steps
+            + cal.intercept)
+
+
 def evaluate_layer(scheme: LayerScheme, hw: HWTemplate,
                    nodes_assigned: Optional[int] = None,
                    src_onchip: bool = False,

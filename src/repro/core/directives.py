@@ -135,6 +135,18 @@ class LevelBlocking:
         return LevelBlocking(dict(self.t), dict(self.s), tuple(self.order),
                              dict(self.shr))
 
+    def to_json_dict(self) -> Dict:
+        return {"t": dict(self.t), "s": dict(self.s),
+                "order": list(self.order), "shr": dict(self.shr)}
+
+    @staticmethod
+    def from_json_dict(d: Mapping) -> "LevelBlocking":
+        return LevelBlocking(
+            t={k: int(v) for k, v in d.get("t", {}).items()},
+            s={k: int(v) for k, v in d.get("s", {}).items()},
+            order=tuple(d.get("order", LevelBlocking().order)),
+            shr={k: int(v) for k, v in d.get("shr", {}).items()})
+
 
 @dataclasses.dataclass
 class LayerScheme:
@@ -289,6 +301,24 @@ class LayerScheme:
             m_rows.append(list(mask))
             shr_rows.append([int(lv.shr.get(t, 1)) for t in tensor_names])
         return t_rows, s_rows, o_rows, m_rows, shr_rows
+
+    # -- JSON (de)serialization ----------------------------------------------
+    def to_json(self) -> Dict:
+        """Stable serializable form: the layer spec plus one blocking dict
+        per level (inner -> outer).  Round-trips via ``from_json`` with
+        bit-identical cost-model scores (see tests/test_lowering.py)."""
+        return {"layer": self.layer.to_json_dict(),
+                "levels": [lv.to_json_dict() for lv in self.levels]}
+
+    @staticmethod
+    def from_json(d: Mapping, layer: Optional[LayerSpec] = None
+                  ) -> "LayerScheme":
+        """Rebuild a scheme; pass ``layer`` to re-bind to an existing graph's
+        spec instead of reconstructing one from the embedded JSON."""
+        lay = layer if layer is not None \
+            else LayerSpec.from_json_dict(d["layer"])
+        return LayerScheme(lay, [LevelBlocking.from_json_dict(lv)
+                                 for lv in d["levels"]])
 
     def top_level_granularity(self) -> Dict[str, int]:
         """Tile sizes of the output tensor at the outermost on-chip level —

@@ -31,6 +31,62 @@ class NetworkSchedule:
     def valid(self) -> bool:
         return self.total_energy_pj != float("inf")
 
+    def scheme(self, layer_name: str) -> LayerScheme:
+        """The solved intra-layer scheme for one layer (KeyError if the
+        layer was not scheduled)."""
+        return self.layer_schemes[layer_name]
+
+    # -- JSON (de)serialization ----------------------------------------------
+    def to_json(self) -> Dict:
+        """Serializable form of the whole solved schedule: per-layer schemes
+        (with embedded layer specs), per-layer cost breakdowns, and the
+        chosen inter-layer chain — enough to cache a solve or ship it to an
+        executor without re-running the solver."""
+        chain = None
+        if self.chain is not None:
+            chain = [{"start": s.start, "stop": s.stop,
+                      "alloc": [list(a) for a in s.alloc],
+                      "granule_frac": s.granule_frac}
+                     for s in self.chain.segments]
+        return {
+            "graph_name": self.graph_name,
+            "chain": chain,
+            "layer_schemes": {n: s.to_json()
+                              for n, s in self.layer_schemes.items()},
+            "layer_costs": {n: dataclasses.asdict(c)
+                            for n, c in self.layer_costs.items()},
+            "total_energy_pj": self.total_energy_pj,
+            "total_latency_cycles": self.total_latency_cycles,
+            "solve_seconds": self.solve_seconds,
+        }
+
+    @staticmethod
+    def from_json(d: Dict, graph: Optional[LayerGraph] = None
+                  ) -> "NetworkSchedule":
+        """Rebuild a schedule; pass ``graph`` to re-bind schemes to existing
+        ``LayerSpec`` objects (names must match) instead of reconstructing
+        them from the embedded JSON."""
+        from .interlayer import SegmentScheme
+        chain = None
+        if d.get("chain") is not None:
+            chain = Chain(segments=tuple(
+                SegmentScheme(start=s["start"], stop=s["stop"],
+                              alloc=tuple(tuple(a) for a in s["alloc"]),
+                              granule_frac=s["granule_frac"])
+                for s in d["chain"]), est_cost=0.0)
+        schemes = {}
+        for name, sj in d["layer_schemes"].items():
+            layer = graph.by_name[name] if graph is not None else None
+            schemes[name] = LayerScheme.from_json(sj, layer=layer)
+        costs = {n: CostBreakdown(**c)
+                 for n, c in d.get("layer_costs", {}).items()}
+        return NetworkSchedule(
+            graph_name=d["graph_name"], chain=chain, layer_schemes=schemes,
+            layer_costs=costs,
+            total_energy_pj=d["total_energy_pj"],
+            total_latency_cycles=d["total_latency_cycles"],
+            solve_seconds=d.get("solve_seconds", 0.0))
+
 
 def solve_segment(graph: LayerGraph, hw: HWTemplate, seg, consumers,
                   layer_solver=solve_intra_layer,

@@ -14,6 +14,23 @@ def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
     return jnp.tanh(x / cap) * cap if cap > 0 else x
 
 
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """FC-layer oracle: x [N, C] @ w [C, K] -> [N, K] (f32 accumulation)."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   precision=jax.lax.Precision.HIGHEST).astype(x.dtype)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Conv-layer oracle: x [N, C, XI, YI], w [K, C, R, S] -> [N, K, XO, YO]
+    with VALID padding (the solver's layer specs bake the halo into the
+    input extent, so no implicit padding exists)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        precision=jax.lax.Precision.HIGHEST).astype(x.dtype)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True, window: int = 0,
                   logit_softcap: float = 0.0,

@@ -1,0 +1,21 @@
+"""Lowering subsystem: compile solved dataflow schemes into executable
+Pallas plans, execute/verify them, and calibrate the cost model against
+measured runtimes.
+
+  solver (LayerScheme / NetworkSchedule)
+      -> plan.lower_scheme / plan.lower_schedule   (KernelPlan)
+      -> exec.execute_plan / verify_plan / measure_plan   (pl.pallas_call)
+      -> calibrate.run_calibration   (Spearman gate + fitted Calibration)
+"""
+from .plan import GridAxis, KernelPlan, lower_scheme, lower_schedule
+from .exec import (execute_plan, make_inputs, measure_plan,
+                   reference_output, verify_plan)
+from .calibrate import (fit_calibration, run_calibration, save_record,
+                        spearman)
+
+__all__ = [
+    "GridAxis", "KernelPlan", "lower_scheme", "lower_schedule",
+    "execute_plan", "make_inputs", "measure_plan", "reference_output",
+    "verify_plan", "fit_calibration", "run_calibration", "save_record",
+    "spearman",
+]

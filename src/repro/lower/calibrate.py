@@ -1,0 +1,240 @@
+"""Measured-runtime calibration of the analytical cost model.
+
+Sweeps (scheme, layer) pairs through the full pipeline — solve with the
+intra-layer solver, lower to a ``KernelPlan``, execute through
+``pl.pallas_call``, time it — and compares the detailed model's predicted
+latency against the measured wall clock:
+
+  * **rank correlation** (Spearman): does the model order schemes/layers
+    the same way the hardware does?  This is the trust gate every future
+    solver change can be held to (the MAESTRO lesson: analytical models
+    are only as good as their measured validation);
+  * **per-term scale coefficients**: least-squares fit of measured seconds
+    against the roofline's component cycle terms (compute, DRAM, GBUF)
+    plus a per-grid-step launch overhead.  The fit is exported as a
+    ``cost_model.Calibration`` that ``cost_model.predicted_seconds`` /
+    ``BatchResult.predicted_seconds`` optionally load to turn cycle counts
+    into wall-clock estimates.
+
+On CPU the kernels run in Pallas interpret mode, so absolute numbers
+calibrate the *interpreter*, not silicon — the record stores the backend so
+a TPU-measured record is distinguishable.  Rank correlation is meaningful
+on both.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..core.cost_model import Calibration, cycle_terms
+from ..core.directives import LayerScheme, canonical_orders
+from ..core.solver.intralayer import Constraints, solve_intra_layer
+from ..hw.template import HWTemplate
+from ..hw.presets import eyeriss_multinode
+from ..workloads.layers import LayerSpec, attention, conv, fc
+from .exec import make_inputs, plan_runner, reference_output, rel_error
+from .plan import lower_scheme
+
+
+# ---------------------------------------------------------------------------
+# Spearman rank correlation (no scipy dependency)
+# ---------------------------------------------------------------------------
+
+def _ranks(a: np.ndarray) -> np.ndarray:
+    a = np.asarray(a, dtype=float)
+    order = np.argsort(a, kind="mergesort")
+    r = np.empty(len(a))
+    r[order] = np.arange(1, len(a) + 1)
+    vals, inv, counts = np.unique(a, return_inverse=True, return_counts=True)
+    sums = np.zeros(len(vals))
+    np.add.at(sums, inv, r)
+    return sums[inv] / counts[inv]          # tie-averaged ranks
+
+
+def spearman(x: Sequence[float], y: Sequence[float]) -> float:
+    rx, ry = _ranks(np.asarray(x)), _ranks(np.asarray(y))
+    rx -= rx.mean()
+    ry -= ry.mean()
+    denom = float(np.sqrt((rx ** 2).sum() * (ry ** 2).sum()))
+    return float((rx * ry).sum() / denom) if denom > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Sweep definition
+# ---------------------------------------------------------------------------
+
+def default_hw() -> HWTemplate:
+    """A deliberately small node grid so realistic layers overflow on-chip
+    capacity and the DRAM-level loop nest (the Pallas grid) is non-trivial."""
+    return eyeriss_multinode(nodes=4, pe=8)
+
+
+def default_sweep(quick: bool = True) -> List[LayerSpec]:
+    """conv / matmul / attention layers spanning ~3 orders of magnitude of
+    work, all small enough for interpret-mode execution."""
+    layers = [
+        fc("cal.fc.s", 64, 128, 128),
+        fc("cal.fc.m", 64, 512, 512),
+        fc("cal.fc.l", 128, 1024, 1024),
+        fc("cal.fc.wide", 512, 1024, 512),
+        fc("cal.fc.xl", 256, 2048, 1024),
+        conv("cal.conv.s", 2, 16, 32, 14, 14, 3, 3),
+        conv("cal.conv.m", 2, 64, 64, 28, 28, 3, 3),
+        conv("cal.conv.5x5", 4, 32, 96, 14, 14, 5, 5),
+        conv("cal.conv.stride2", 2, 32, 64, 28, 28, 3, 3, stride=2),
+        conv("cal.conv.deep", 2, 96, 128, 14, 14, 3, 3),
+        conv("cal.conv.l", 4, 64, 128, 28, 28, 3, 3),
+        attention("cal.attn.s", 2, 2, 128, 64),
+        attention("cal.attn.m", 2, 4, 256, 64),
+        attention("cal.attn.l", 4, 4, 256, 64),
+        attention("cal.attn.long", 2, 4, 512, 64),
+    ]
+    if not quick:
+        layers += [
+            fc("cal.fc.xxl", 256, 4096, 2048),
+            conv("cal.conv.xl", 4, 128, 256, 28, 28, 3, 3),
+            attention("cal.attn.xl", 4, 8, 512, 64),
+        ]
+    return layers
+
+
+def _active_nest(scheme: LayerScheme) -> tuple:
+    """The DRAM-level loops that actually run (dims with tf > 1, in nest
+    order) — two orders with the same active nest lower to the same plan."""
+    top = scheme.levels[-1]
+    sig = [d for d in top.order if top.tf(d) > 1]
+    sig += [d for d in scheme.layer.dims if top.tf(d) > 1 and d not in sig]
+    return tuple(sig)
+
+
+def scheme_variants(layer: LayerSpec, hw: HWTemplate,
+                    n_variants: int = 2) -> List[LayerScheme]:
+    """The solver's best scheme plus up to ``n_variants`` DRAM loop-order
+    variants of it (identical factors, different outermost nest — different
+    grid order AND different predicted traffic).  Orders whose *active*
+    nest matches an already-kept scheme are no-op duplicates and skipped,
+    so every returned scheme lowers to a distinct plan."""
+    scheme, cost = solve_intra_layer(layer, hw,
+                                     Constraints(nodes=hw.node_array))
+    if scheme is None or not cost.valid:
+        return []
+    out = [scheme]
+    seen = {_active_nest(scheme)}
+    for order in canonical_orders():
+        if len(out) >= 1 + n_variants:
+            break
+        var = LayerScheme(layer, [lv.copy() for lv in scheme.levels])
+        var.levels[-1].order = tuple(order)
+        sig = _active_nest(var)
+        if sig in seen:
+            continue
+        seen.add(sig)
+        out.append(var)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Calibration run
+# ---------------------------------------------------------------------------
+
+def fit_calibration(pairs: List[Dict], hw: HWTemplate) -> Calibration:
+    """Least-squares fit: measured_seconds ~ cycle terms + grid steps."""
+    X = np.array([[p["cyc_compute"], p["cyc_dram"], p["cyc_gbuf"],
+                   p["grid_steps"], 1.0] for p in pairs])
+    y = np.array([p["measured_seconds"] for p in pairs])
+    coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+    raw = [p["predicted_cycles"] for p in pairs]
+    return Calibration(
+        a_compute=float(coef[0]), a_dram=float(coef[1]),
+        a_gbuf=float(coef[2]), a_step=float(coef[3]),
+        intercept=float(coef[4]),
+        spearman=spearman(raw, y), n_pairs=len(pairs))
+
+
+def run_calibration(hw: Optional[HWTemplate] = None, quick: bool = True,
+                    layers: Optional[Sequence[LayerSpec]] = None,
+                    n_variants: int = 3, interpret: bool = True,
+                    verify: bool = True, iters: int = 2,
+                    seed: int = 0) -> Dict:
+    """Full calibration sweep; returns a JSON-safe record (see module
+    docstring).  ``record["calibration"]`` round-trips through
+    ``cost_model.Calibration.from_json_dict``."""
+    hw = hw if hw is not None else default_hw()
+    layers = list(layers) if layers is not None else default_sweep(quick)
+    pairs: List[Dict] = []
+    skipped: List[Dict] = []
+    for layer in layers:
+        for vi, scheme in enumerate(scheme_variants(layer, hw, n_variants)):
+            plan = lower_scheme(scheme, hw)
+            if not plan.valid:
+                skipped.append({"layer": layer.name, "variant": vi,
+                                "reason": plan.reason})
+                continue
+            entry = {
+                "layer": layer.name, "kind": plan.kind, "variant": vi,
+                "grid": [(ax.dim, ax.steps) for ax in plan.grid],
+                "grid_steps": plan.grid_steps,
+                "predicted_cycles": plan.predicted.latency_cycles,
+                "predicted_energy_pj": plan.predicted.energy_pj,
+                "predicted_seconds_raw":
+                    plan.predicted.latency_cycles / hw.freq_hz,
+            }
+            entry.update(cycle_terms(plan.predicted, layer.total_macs(), hw))
+            # one jitted runner serves warmup, verification and timing —
+            # the warmup output IS the numerics check, no extra execution
+            inputs = make_inputs(plan, seed)
+            run = plan_runner(plan, interpret=interpret, jit=True)
+            out = jax.block_until_ready(run(inputs))
+            if verify:
+                err = rel_error(out, reference_output(plan, inputs))
+                entry["rel_err"] = err
+                if err >= 1e-3:
+                    skipped.append({"layer": layer.name, "variant": vi,
+                                    "reason": f"numerics {err:.2e}"})
+                    continue
+            best = float("inf")
+            for _ in range(max(1, iters)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(inputs))
+                best = min(best, time.perf_counter() - t0)
+            entry["measured_seconds"] = best
+            pairs.append(entry)
+
+    record: Dict = {
+        "hw": hw.name,
+        "backend": "interpret" if interpret else "compiled",
+        "n_pairs": len(pairs),
+        "pairs": pairs,
+        "skipped": skipped,
+    }
+    if len(pairs) >= 3:
+        cal = fit_calibration(pairs, hw)
+        measured = [p["measured_seconds"] for p in pairs]
+        calibrated = [
+            cal.a_compute * p["cyc_compute"] + cal.a_dram * p["cyc_dram"]
+            + cal.a_gbuf * p["cyc_gbuf"] + cal.a_step * p["grid_steps"]
+            + cal.intercept for p in pairs]
+        record["calibration"] = cal.to_json_dict()
+        record["spearman_raw"] = cal.spearman
+        record["spearman_calibrated"] = spearman(calibrated, measured)
+    return record
+
+
+def save_record(record: Dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+
+
+def load_record(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+__all__ = ["spearman", "default_hw", "default_sweep", "scheme_variants",
+           "fit_calibration", "run_calibration", "save_record",
+           "load_record", "Calibration"]

@@ -1,0 +1,344 @@
+"""Execute ``KernelPlan``s through ``pl.pallas_call``.
+
+One generic Pallas kernel per supported layer family (matmul/fc, conv,
+attention), parameterized entirely by the plan: the grid is the solver's
+DRAM-level loop nest (same order), the BlockSpecs carry the plan's block
+sizes and index maps, and reduction grid axes accumulate into the output
+block across revisits (initialized on the first visit, exactly like the
+directive model's partial-sum residency).
+
+Runs in interpret mode on CPU (the numerics/calibration gate) and compiled
+on TPU backends.  Outputs are verified against the pure-jnp oracles in
+``kernels/ref.py``.
+
+Notes on fidelity:
+  * everything on-chip (all node GBUFs + the PE arrays below them) is one
+    Pallas block — a single-core Pallas program models the off-chip
+    boundary, which is the boundary the solver's DRAM loop nest governs;
+  * conv input halos: Pallas blocks cannot overlap, so the input streams
+    in blocked over N/C with the full spatial extent and the kernel slices
+    the (ix, iy) window dynamically — traffic is modeled pessimistically
+    by the solver's halo multiplier either way;
+  * attention keeps running (max, sum) softmax statistics in auxiliary
+    *output* buffers indexed like O, so any loop order the solver picks —
+    even with the KV-position axis outside the query axis — stays
+    numerically exact across block revisits.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..kernels import ref
+from .plan import KernelPlan
+
+
+def _grid(plan: KernelPlan) -> Tuple[int, ...]:
+    return plan.grid_shape if plan.grid else (1,)
+
+
+def _check_compiled_revisit_order(plan: KernelPlan) -> None:
+    """Compiled (non-interpret) Pallas requires revisits of an output block
+    to be consecutive in grid order: every axis *inner* to an
+    output-irrelevant (reduction) axis must itself be output-irrelevant.
+    Interpret mode is buffer-backed and tolerates any order; compiled mode
+    would silently accumulate into a flushed block, so refuse loudly."""
+    rel = plan.layer.tensors["O"]
+    seen_irrelevant = False
+    for ax in plan.grid:
+        if ax.dim not in rel:
+            seen_irrelevant = True
+        elif seen_irrelevant:
+            raise ValueError(
+                "compiled execution needs reduction grid axes innermost; "
+                f"grid is ({', '.join(a.dim for a in plan.grid)}) — run in "
+                "interpret mode or reorder the scheme's DRAM loop order")
+
+
+def _first_visit(plan: KernelPlan):
+    """Predicate: this grid step is the first visit to the current output
+    block (all output-irrelevant grid axes at 0)."""
+    rel = plan.layer.tensors["O"]
+    pred = None
+    for i, ax in enumerate(plan.grid):
+        if ax.dim not in rel:
+            p = pl.program_id(i) == 0
+            pred = p if pred is None else jnp.logical_and(pred, p)
+    return True if pred is None else pred
+
+
+def _init_when(pred, fn) -> None:
+    """Run ``fn`` under ``pl.when(pred)``; unconditionally when the output
+    block is only ever visited once (no reduction grid axes)."""
+    if pred is True:
+        fn()
+    else:
+        pl.when(pred)(fn)
+
+
+# ---------------------------------------------------------------------------
+# matmul / fc
+# ---------------------------------------------------------------------------
+
+def _run_fc(plan: KernelPlan, x: jnp.ndarray, w: jnp.ndarray,
+            interpret: bool) -> jnp.ndarray:
+    layer = plan.layer
+    bn, bc, bk = plan.block["N"], plan.block["C"], plan.block["K"]
+
+    def kern(x_ref, w_ref, o_ref):
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+        _init_when(_first_visit(plan), _init)
+        o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                              preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kern,
+        grid=_grid(plan),
+        in_specs=[
+            pl.BlockSpec((bn, bc), plan.index_map(("N", "C"))),
+            pl.BlockSpec((bc, bk), plan.index_map(("C", "K"))),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), plan.index_map(("N", "K"))),
+        out_shape=jax.ShapeDtypeStruct((layer.dim("N"), layer.dim("K")),
+                                       jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# conv
+# ---------------------------------------------------------------------------
+
+def _run_conv(plan: KernelPlan, x: jnp.ndarray, w: jnp.ndarray,
+              interpret: bool) -> jnp.ndarray:
+    layer = plan.layer
+    R = int(layer.meta["R"])
+    S = int(layer.meta["S"])
+    stride = int(layer.meta["stride"])
+    N, C, K = layer.dim("N"), layer.dim("C"), layer.dim("K")
+    XO, YO = layer.dim("X"), layer.dim("Y")
+    XI, YI = x.shape[2], x.shape[3]
+    bn, bc, bk = plan.block["N"], plan.block["C"], plan.block["K"]
+    bx, by = plan.block["X"], plan.block["Y"]
+    spanx = (bx - 1) * stride + R
+    spany = (by - 1) * stride + S
+    x_axis, y_axis = plan.axis_of("X"), plan.axis_of("Y")
+
+    def kern(x_ref, w_ref, o_ref):
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+        _init_when(_first_visit(plan), _init)
+        ix = pl.program_id(x_axis) if x_axis >= 0 else 0
+        iy = pl.program_id(y_axis) if y_axis >= 0 else 0
+        xin = x_ref[...]                       # [bn, bc, XI, YI]
+        xw = jax.lax.dynamic_slice(
+            xin, (0, 0, ix * bx * stride, iy * by * stride),
+            (bn, bc, spanx, spany))
+        acc = jnp.zeros((bn, bk, bx, by), jnp.float32)
+        for r in range(R):                     # R, S pinned in-block, as in
+            for s in range(S):                 # the directive model
+                patch = jax.lax.slice(
+                    xw, (0, 0, r, s),
+                    (bn, bc, r + (bx - 1) * stride + 1,
+                     s + (by - 1) * stride + 1),
+                    (1, 1, stride, stride))    # [bn, bc, bx, by]
+                acc += jnp.einsum("ncxy,kc->nkxy", patch, w_ref[:, :, r, s],
+                                  preferred_element_type=jnp.float32)
+        o_ref[...] += acc
+
+    return pl.pallas_call(
+        kern,
+        grid=_grid(plan),
+        in_specs=[
+            # halo'd input: blocked over N/C, full spatial extent streamed
+            pl.BlockSpec((bn, bc, XI, YI), plan.index_map(("N", "C", "*",
+                                                           "*"))),
+            pl.BlockSpec((bk, bc, R, S), plan.index_map(("K", "C", "*",
+                                                         "*"))),
+        ],
+        out_specs=pl.BlockSpec((bn, bk, bx, by),
+                               plan.index_map(("N", "K", "X", "Y"))),
+        out_shape=jax.ShapeDtypeStruct((N, K, XO, YO), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# attention (flash-style online softmax over KV-position blocks)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _run_attention(plan: KernelPlan, q: jnp.ndarray, k: jnp.ndarray,
+                   v: jnp.ndarray, interpret: bool) -> jnp.ndarray:
+    layer = plan.layer
+    NH, Sq, Skv = layer.dim("N"), layer.dim("X"), layer.dim("C")
+    D = layer.dim("K")
+    bn, bx, bc = plan.block["N"], plan.block["X"], plan.block["C"]
+    scale = D ** -0.5
+
+    def kern(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref):
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+        _init_when(_first_visit(plan), _init)
+        s = jnp.einsum("nqd,nkd->nqk", q_ref[...], k_ref[...],
+                       preferred_element_type=jnp.float32) * scale
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+            jnp.einsum("nqk,nkd->nqd", p, v_ref[...],
+                       preferred_element_type=jnp.float32)
+
+    acc, _m, lsum = pl.pallas_call(
+        kern,
+        grid=_grid(plan),
+        in_specs=[
+            pl.BlockSpec((bn, bx, D), plan.index_map(("N", "X", "*"))),
+            pl.BlockSpec((bn, bc, D), plan.index_map(("N", "C", "*"))),
+            pl.BlockSpec((bn, bc, D), plan.index_map(("N", "C", "*"))),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bx, D), plan.index_map(("N", "X", "*"))),
+            pl.BlockSpec((bn, bx), plan.index_map(("N", "X"))),
+            pl.BlockSpec((bn, bx), plan.index_map(("N", "X"))),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NH, Sq, D), jnp.float32),
+            jax.ShapeDtypeStruct((NH, Sq), jnp.float32),
+            jax.ShapeDtypeStruct((NH, Sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return acc / jnp.maximum(lsum, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Public API: inputs, execution, verification, measurement
+# ---------------------------------------------------------------------------
+
+def make_inputs(plan: KernelPlan, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Deterministic dense float32 inputs matching the plan's canonical
+    layouts (fc: I[N,C] W[C,K]; conv: I[N,C,XI,YI] W[K,C,R,S];
+    attention: Q/K/V [N, S, D])."""
+    layer = plan.layer
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    if plan.kind == "fc":
+        return {"I": jax.random.normal(keys[0], (layer.dim("N"),
+                                                 layer.dim("C")), jnp.float32),
+                "W": jax.random.normal(keys[1], (layer.dim("C"),
+                                                 layer.dim("K")), jnp.float32)
+                * layer.dim("C") ** -0.5}
+    if plan.kind == "conv":
+        R, S = int(layer.meta["R"]), int(layer.meta["S"])
+        stride = int(layer.meta["stride"])
+        XI = (layer.dim("X") - 1) * stride + R
+        YI = (layer.dim("Y") - 1) * stride + S
+        fan_in = layer.dim("C") * R * S
+        return {"I": jax.random.normal(
+                    keys[0], (layer.dim("N"), layer.dim("C"), XI, YI),
+                    jnp.float32),
+                "W": jax.random.normal(
+                    keys[1], (layer.dim("K"), layer.dim("C"), R, S),
+                    jnp.float32) * fan_in ** -0.5}
+    if plan.kind == "attention":
+        NH, Sq, Skv, D = (layer.dim("N"), layer.dim("X"), layer.dim("C"),
+                          layer.dim("K"))
+        return {"Q": jax.random.normal(keys[0], (NH, Sq, D), jnp.float32),
+                "K": jax.random.normal(keys[1], (NH, Skv, D), jnp.float32),
+                "V": jax.random.normal(keys[2], (NH, Skv, D), jnp.float32)}
+    raise ValueError(f"unsupported kind {plan.kind!r}")
+
+
+def plan_runner(plan: KernelPlan, interpret: bool = True,
+                jit: bool = False):
+    """Build a callable ``inputs_dict -> output`` for the plan.  With
+    ``jit=True`` the whole pallas_call is staged once and re-invocations
+    time the compiled executable (the measurement path)."""
+    if not plan.valid:
+        raise ValueError(f"cannot execute invalid plan: {plan.reason}")
+    if not interpret:
+        _check_compiled_revisit_order(plan)
+    if plan.kind == "fc":
+        names, base = ("I", "W"), \
+            lambda i, w: _run_fc(plan, i, w, interpret)
+    elif plan.kind == "conv":
+        names, base = ("I", "W"), \
+            lambda i, w: _run_conv(plan, i, w, interpret)
+    elif plan.kind == "attention":
+        names, base = ("Q", "K", "V"), \
+            lambda q, k, v: _run_attention(plan, q, k, v, interpret)
+    else:
+        raise ValueError(f"unsupported kind {plan.kind!r}")
+    fn = jax.jit(base) if jit else base
+    return lambda inputs: fn(*(inputs[n] for n in names))
+
+
+def execute_plan(plan: KernelPlan, inputs: Optional[Dict] = None,
+                 interpret: bool = True, seed: int = 0) -> jnp.ndarray:
+    """Run the plan through ``pl.pallas_call`` and return the output."""
+    inputs = inputs if inputs is not None else make_inputs(plan, seed)
+    return plan_runner(plan, interpret)(inputs)
+
+
+def reference_output(plan: KernelPlan, inputs: Dict) -> jnp.ndarray:
+    """Ground truth from ``kernels/ref.py`` for the plan's layer."""
+    if plan.kind == "fc":
+        return ref.matmul_ref(inputs["I"], inputs["W"])
+    if plan.kind == "conv":
+        return ref.conv2d_ref(inputs["I"], inputs["W"],
+                              stride=int(plan.layer.meta["stride"]))
+    if plan.kind == "attention":
+        out = ref.attention_ref(inputs["Q"][:, None], inputs["K"][:, None],
+                                inputs["V"][:, None], causal=False)
+        return out[:, 0]
+    raise ValueError(f"unsupported kind {plan.kind!r}")
+
+
+def rel_error(out, want) -> float:
+    import numpy as np
+    a = np.asarray(out, np.float32)
+    b = np.asarray(want, np.float32)
+    return float(np.max(np.abs(a - b)) / (np.abs(b).max() + 1e-9))
+
+
+def verify_plan(plan: KernelPlan, interpret: bool = True, seed: int = 0,
+                tol: float = 1e-3) -> Tuple[bool, float]:
+    """Execute the plan and compare against the oracle.  Returns
+    (ok, max relative error)."""
+    inputs = make_inputs(plan, seed)
+    out = execute_plan(plan, inputs, interpret=interpret)
+    err = rel_error(out, reference_output(plan, inputs))
+    return err < tol, err
+
+
+def measure_plan(plan: KernelPlan, inputs: Optional[Dict] = None,
+                 interpret: bool = True, iters: int = 2,
+                 warmup: int = 1, jit: bool = True) -> float:
+    """Measured wall-clock seconds for one plan execution (min over
+    ``iters`` after ``warmup`` runs; ``block_until_ready`` fences).
+
+    Measures the jitted executable by default so the time reflects the
+    plan's actual compute/memory work, not per-call tracing overhead
+    (compilation happens during warmup)."""
+    inputs = inputs if inputs is not None else make_inputs(plan)
+    run = plan_runner(plan, interpret, jit=jit)
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(run(inputs))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(inputs))
+        best = min(best, time.perf_counter() - t0)
+    return best

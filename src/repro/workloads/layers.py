@@ -51,6 +51,11 @@ class LayerSpec:
     # one psum), not the full R*S window — matching row-stationary /
     # systolic PE mappings.  Defaults to ``unit`` when None.
     unit_inner: Optional[Mapping[str, float]] = None
+    # kind-specific execution parameters needed to *run* the layer (the
+    # analytic model folds them into ``unit``/``macs_per_point``): R, S and
+    # stride for conv-family layers, causal for attention.  Excluded from
+    # the solver memo signature — it only affects lowering/execution.
+    meta: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
     def inner_unit(self, t: str) -> float:
         u = self.unit_inner if self.unit_inner is not None else self.unit
@@ -89,6 +94,40 @@ class LayerSpec:
     def ofmap_size(self) -> float:
         return self.tensor_size("O")
 
+    # ---- JSON (de)serialization --------------------------------------------
+    def to_json_dict(self) -> Dict:
+        """Stable JSON-safe form (frozensets become sorted lists)."""
+        return {
+            "name": self.name, "kind": self.kind,
+            "dims": dict(self.dims),
+            "tensors": {t: sorted(rel) for t, rel in self.tensors.items()},
+            "unit": dict(self.unit),
+            "macs_per_point": self.macs_per_point,
+            "reduction_dims": sorted(self.reduction_dims),
+            "src": list(self.src),
+            "bytes_per_elem": self.bytes_per_elem,
+            "has_weights": self.has_weights,
+            "unit_inner": None if self.unit_inner is None
+            else dict(self.unit_inner),
+            "meta": dict(self.meta),
+        }
+
+    @staticmethod
+    def from_json_dict(d: Mapping) -> "LayerSpec":
+        return LayerSpec(
+            name=d["name"], kind=d["kind"],
+            dims={k: int(v) for k, v in d["dims"].items()},
+            tensors={t: frozenset(rel) for t, rel in d["tensors"].items()},
+            unit=dict(d["unit"]),
+            macs_per_point=float(d["macs_per_point"]),
+            reduction_dims=frozenset(d["reduction_dims"]),
+            src=tuple(d.get("src", ())),
+            bytes_per_elem=int(d.get("bytes_per_elem", 2)),
+            has_weights=bool(d.get("has_weights", True)),
+            unit_inner=None if d.get("unit_inner") is None
+            else dict(d["unit_inner"]),
+            meta=dict(d.get("meta", {})))
+
     def ifmap_size(self) -> float:
         return self.tensor_size("I") if "I" in self.tensors else 0.0
 
@@ -108,7 +147,8 @@ def conv(name: str, n: int, c: int, k: int, xo: int, yo: int, r: int, s: int,
         unit_inner={"I": xi / float(xo), "W": float(r), "O": 1.0},
         macs_per_point=float(r * s),
         reduction_dims=frozenset({"C"}),
-        src=tuple(src))
+        src=tuple(src),
+        meta={"R": r, "S": s, "stride": stride})
 
 
 def fc(name: str, n: int, c: int, k: int, src: Sequence[str] = ()) -> LayerSpec:
@@ -139,7 +179,8 @@ def dwconv(name: str, n: int, c: int, xo: int, yo: int, r: int, s: int,
         unit_inner={"I": xi / float(xo), "W": float(r), "O": 1.0},
         macs_per_point=float(r * s),
         reduction_dims=frozenset(),
-        src=tuple(src))
+        src=tuple(src),
+        meta={"R": r, "S": s, "stride": stride})
 
 
 def pool(name: str, n: int, c: int, xo: int, yo: int, r: int, s: int,
@@ -156,7 +197,35 @@ def pool(name: str, n: int, c: int, xo: int, yo: int, r: int, s: int,
         unit_inner={"I": xi / float(xo), "O": 1.0},
         macs_per_point=float(r * s),
         reduction_dims=frozenset(),
-        src=tuple(src), has_weights=False)
+        src=tuple(src), has_weights=False,
+        meta={"R": r, "S": s, "stride": stride})
+
+
+def attention(name: str, batch: int, heads: int, seq_q: int, d_head: int,
+              seq_kv: Optional[int] = None,
+              src: Sequence[str] = ()) -> LayerSpec:
+    """Fused attention scores+context op (softmax(QK^T) V) for one head
+    group, in solver-generic form.
+
+    Dim mapping: N = batch*heads (independent rows), X = query positions,
+    C = KV positions (the softmax/weighted-sum reduction), K = head dim.
+    Tensors: I = Q [N, X, K]; W = the K/V pair [N, C, K] (unit 2.0 — both
+    operands stream together); O [N, X, K].  Two MACs per point of the
+    N x X x C x K space (QK^T and PV).  The scores/probs matrix never
+    appears as a tensor — like flash attention, it lives within a block.
+    """
+    skv = seq_kv if seq_kv is not None else seq_q
+    return LayerSpec(
+        name=name, kind="attention",
+        dims={"N": batch * heads, "X": seq_q, "C": skv, "K": d_head},
+        tensors={"I": frozenset({"N", "X", "K"}),
+                 "W": frozenset({"N", "C", "K"}),
+                 "O": frozenset({"N", "X", "K"})},
+        unit={"I": 1.0, "W": 2.0, "O": 1.0},
+        macs_per_point=2.0,
+        reduction_dims=frozenset({"C"}),
+        src=tuple(src),
+        meta={"batch": batch, "heads": heads})
 
 
 def eltwise(name: str, n: int, c: int, xo: int, yo: int,
