@@ -1,7 +1,9 @@
 """Solver-speed benchmark: batched cost model vs scalar judge, batched
 inter-layer level vs the scalar PR-1 baseline, and end-to-end solve times,
 emitted as a JSON perf record (``BENCH_solver.json`` at the repo root) to
-track the repo's bench trajectory.
+track the repo's bench trajectory.  ``--calibrate``/``--network`` add the
+lowering sweeps (per-kernel and whole-network), written to
+``BENCH_calibration.json`` / ``BENCH_network.json``.
 
     python benchmarks/bench_solver_speed.py [--quick] [--out perf.json]
 
@@ -190,6 +192,34 @@ def bench_solve(hw, nets, batch: int) -> dict:
     return out
 
 
+def bench_network(quick: bool) -> dict:
+    """Network-tier pipeline: solve -> lower_network -> execute_network ->
+    measure, per net (repro.lower.calibrate.run_network_calibration).  The
+    full per-net record goes to BENCH_network.json next to the other perf
+    records; the main record keeps a summary."""
+    from repro.lower.calibrate import run_network_calibration, save_record
+    t0 = time.perf_counter()
+    # 3 timed iters on the full sweep: the smallest nets run in ~0.3 s and
+    # a single polluted sample can reorder them (the spearman gate)
+    rec = run_network_calibration(quick=quick, iters=1 if quick else 3)
+    rec["sweep_seconds"] = time.perf_counter() - t0
+    save_record(rec, os.path.join(REPO_ROOT, "BENCH_network.json"))
+    # include nets the sweep excluded for numerics, so --max-network-rel-err
+    # fires on any divergence, not just sub-threshold ones
+    errs = [e["max_rel_err"] for e in rec["nets"]] + \
+        [s["max_rel_err"] for s in rec["skipped"] if "max_rel_err" in s]
+    worst_err = max(errs, default=float("inf"))
+    return {
+        "n_nets": rec["n_nets"],
+        "n_skipped": len(rec["skipped"]),
+        "nets": [e["net"] for e in rec["nets"]],
+        "spearman_network": rec.get("spearman_network"),
+        "worst_rel_err": worst_err,
+        "total_forwarded": sum(e["n_forwarded"] for e in rec["nets"]),
+        "sweep_seconds": rec["sweep_seconds"],
+    }
+
+
 def bench_calibration(quick: bool) -> dict:
     """Solver -> lowering -> pallas execution -> measured-vs-predicted
     calibration sweep (repro.lower.calibrate).  The full per-pair record is
@@ -240,12 +270,29 @@ def main(argv=None) -> int:
     ap.add_argument("--min-calibration-pairs", type=int, default=None,
                     help="exit nonzero if the calibration sweep produced "
                     "fewer (scheme, layer) pairs than this")
+    ap.add_argument("--network", action="store_true",
+                    help="also run the network-execution sweep (writes "
+                    "BENCH_network.json)")
+    ap.add_argument("--network-only", action="store_true",
+                    help="run ONLY the network-execution sweep (the CI "
+                    "network smoke gate)")
+    ap.add_argument("--min-network-nets", type=int, default=None,
+                    help="exit nonzero if fewer nets executed end-to-end "
+                    "than this")
+    ap.add_argument("--max-network-rel-err", type=float, default=None,
+                    help="exit nonzero if any executed net's worst "
+                    "per-layer rel error vs the whole-graph reference "
+                    "exceeds this")
+    ap.add_argument("--min-network-spearman", type=float, default=None,
+                    help="exit nonzero if network-level predicted-vs-"
+                    "measured Spearman is below this")
     args = ap.parse_args(argv)
-    if args.calibrate_only and (args.min_speedup is not None
-                                or args.min_interlayer_speedup is not None
-                                or args.max_transformer_seconds is not None):
-        ap.error("--calibrate-only skips the solver benches; drop it or "
-                 "drop the solver gate flags")
+    only = args.calibrate_only or args.network_only
+    if only and (args.min_speedup is not None
+                 or args.min_interlayer_speedup is not None
+                 or args.max_transformer_seconds is not None):
+        ap.error("--calibrate-only/--network-only skip the solver benches; "
+                 "drop them or drop the solver gate flags")
 
     hw = eyeriss_multinode()
     n_schemes = 2000 if args.quick else 20000
@@ -254,6 +301,9 @@ def main(argv=None) -> int:
     if args.calibrate_only:
         record = {"quick": args.quick,
                   "calibration": bench_calibration(args.quick)}
+    elif args.network_only:
+        record = {"quick": args.quick,
+                  "network": bench_network(args.quick)}
     else:
         record = {
             "quick": args.quick,
@@ -265,11 +315,13 @@ def main(argv=None) -> int:
         }
         if args.calibrate:
             record["calibration"] = bench_calibration(args.quick)
+        if args.network:
+            record["network"] = bench_network(args.quick)
     text = json.dumps(record, indent=2)
     print(text)
     # BENCH_solver.json at the repo root is the perf-trajectory record
-    # (kept intact by calibration-only runs, which have their own record)
-    paths = [args.out] if args.calibrate_only else \
+    # (kept intact by calibration-/network-only runs, which have their own)
+    paths = [args.out] if only else \
         [os.path.join(REPO_ROOT, "BENCH_solver.json"), args.out]
     for path in filter(None, paths):
         with open(path, "w") as f:
@@ -291,7 +343,32 @@ def main(argv=None) -> int:
             cal["n_pairs"] < args.min_calibration_pairs:
         fails.append(f"calibration pairs {cal['n_pairs']} < "
                      f"{args.min_calibration_pairs}")
-    if args.calibrate_only:
+    nw = record.get("network")
+    if args.min_network_nets is not None:
+        if nw is None:
+            fails.append("network gate set but sweep did not run "
+                         "(pass --network)")
+        elif nw["n_nets"] < args.min_network_nets:
+            fails.append(f"network execution covered {nw['n_nets']} nets < "
+                         f"{args.min_network_nets} "
+                         f"(skipped: {nw['n_skipped']})")
+    if args.max_network_rel_err is not None:
+        if nw is None:
+            fails.append("network rel-err gate set but sweep did not run "
+                         "(pass --network)")
+        elif nw["worst_rel_err"] > args.max_network_rel_err:
+            fails.append(f"network worst rel err {nw['worst_rel_err']:.2e} "
+                         f"> {args.max_network_rel_err}")
+    if args.min_network_spearman is not None:
+        if nw is None:
+            fails.append("network spearman gate set but sweep did not run "
+                         "(pass --network)")
+        elif nw["spearman_network"] is None:
+            fails.append("network sweep produced too few nets for spearman")
+        elif nw["spearman_network"] < args.min_network_spearman:
+            fails.append(f"network spearman {nw['spearman_network']:.3f} < "
+                         f"{args.min_network_spearman}")
+    if only:
         for f_ in fails:
             print("FAIL:", f_, file=sys.stderr)
         return 1 if fails else 0

@@ -3,8 +3,11 @@
 accelerator and prints the winning tensor-centric directives (paper
 Listing-1 style), the energy/latency, and a comparison with random search.
 Then the winning scheme for one conv layer is LOWERED to a Pallas kernel
-plan and executed (interpret mode on CPU), printing predicted-vs-measured
-latency — the full solver -> silicon-facing pipeline in one script.
+plan and executed (interpret mode on CPU), and finally the WHOLE batch-1
+schedule is compiled to a NetworkPlan and executed end-to-end — segment
+pipelining, on-chip forwarding and all — printing predicted-vs-measured
+latency at both tiers: the full solver -> silicon-facing pipeline in one
+script.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,7 +22,9 @@ except ImportError:      # fallback: resolve src/ relative to this file so
 
 from repro.core.solver import random_search, solve
 from repro.hw.presets import eyeriss_multinode
-from repro.lower import lower_scheme, make_inputs, measure_plan, verify_plan
+from repro.lower import (compare_network, lower_scheme, make_inputs,
+                         make_network_inputs, measure_network, measure_plan,
+                         network_runner, verify_plan)
 from repro.workloads.nets import get_net
 
 
@@ -50,7 +55,8 @@ def main():
 
     # --- lower the winning scheme for one layer and actually run it --------
     # (batch 1 keeps the interpret-mode execution snappy on CPU)
-    edge = solve(get_net("alexnet", batch=1), hw)
+    edge_net = get_net("alexnet", batch=1)
+    edge = solve(edge_net, hw)
     plan = lower_scheme(edge.layer_schemes["conv3"], hw)
     print(f"\n--- lowering conv3 (batch 1) to a Pallas plan ---")
     print(plan.describe())
@@ -65,6 +71,24 @@ def main():
           f"{measured * 1e3:.3f} ms")
     print("(interpret mode calibrates the model's *ranking*, not absolute "
           "silicon time — see README 'Lowering & calibration')")
+
+    # --- then lower and execute the WHOLE network (the network tier) -------
+    nplan = edge.lower(edge_net, hw)
+    print(f"\n--- network tier: executing all of alexnet (batch 1) ---")
+    print(nplan.describe())
+    # one compiled runner serves verification, warmup and timing
+    net_inputs = make_network_inputs(nplan)
+    run = network_runner(nplan, net_inputs)
+    ver = compare_network(nplan, run(), net_inputs)
+    print(f"whole-graph numerics vs reference pass: "
+          f"{'OK' if ver.ok else 'MISMATCH'} (worst layer {ver.worst_layer}, "
+          f"max rel err {ver.max_rel_err:.1e}); "
+          f"{ver.n_forwarded} tensors forwarded on-chip")
+    net_measured = measure_network(nplan, iters=1, warmup=0, runner=run)
+    net_predicted = nplan.predicted_latency_cycles / hw.freq_hz
+    print(f"network predicted {net_predicted * 1e3:.2f} ms | measured "
+          f"(interpret) {net_measured * 1e3:.2f} ms — see BENCH_network.json "
+          "for the multi-net Spearman record")
 
 
 if __name__ == "__main__":

@@ -328,6 +328,15 @@ class LayerScheme:
         rel = self.layer.tensors["O"]
         return {d: self.cum_factor(d, top) for d in sorted(rel)}
 
+    def forward_bytes(self, granule_frac: float = 1.0) -> float:
+        """Bytes of the output-fmap granule a pipelined consumer receives
+        on-chip (§III-A fine-grained forwarding): the per-segment footprint
+        accounting hook the network lowering tier validates against the
+        segment's node-region alloc share.  Callers apply their own
+        double-buffering factor (cf. ``estimate.min_buffer_requirement_bytes``)."""
+        return self.layer.ofmap_size() * granule_frac \
+            * self.layer.bytes_per_elem
+
 
 # ---------------------------------------------------------------------------
 # small utilities shared by solvers

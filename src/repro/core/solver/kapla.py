@@ -36,6 +36,13 @@ class NetworkSchedule:
         layer was not scheduled)."""
         return self.layer_schemes[layer_name]
 
+    def lower(self, graph: LayerGraph, hw: HWTemplate, repair: bool = True):
+        """Compile this schedule into an executable ``NetworkPlan`` (the
+        network lowering tier; see ``repro.lower.netplan``).  Imported
+        lazily so the numpy-only solver core never pulls in jax."""
+        from ...lower.netplan import lower_network
+        return lower_network(self, graph, hw, repair=repair)
+
     # -- JSON (de)serialization ----------------------------------------------
     def to_json(self) -> Dict:
         """Serializable form of the whole solved schedule: per-layer schemes
@@ -58,6 +65,8 @@ class NetworkSchedule:
             "total_energy_pj": self.total_energy_pj,
             "total_latency_cycles": self.total_latency_cycles,
             "solve_seconds": self.solve_seconds,
+            "prune_stats": None if self.prune_stats is None
+            else dataclasses.asdict(self.prune_stats),
         }
 
     @staticmethod
@@ -80,12 +89,14 @@ class NetworkSchedule:
             schemes[name] = LayerScheme.from_json(sj, layer=layer)
         costs = {n: CostBreakdown(**c)
                  for n, c in d.get("layer_costs", {}).items()}
+        stats = d.get("prune_stats")
         return NetworkSchedule(
             graph_name=d["graph_name"], chain=chain, layer_schemes=schemes,
             layer_costs=costs,
             total_energy_pj=d["total_energy_pj"],
             total_latency_cycles=d["total_latency_cycles"],
-            solve_seconds=d.get("solve_seconds", 0.0))
+            solve_seconds=d.get("solve_seconds", 0.0),
+            prune_stats=None if stats is None else PruneStats(**stats))
 
 
 def solve_segment(graph: LayerGraph, hw: HWTemplate, seg, consumers,

@@ -31,6 +31,26 @@ def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
         precision=jax.lax.Precision.HIGHEST).astype(x.dtype)
 
 
+def pool2d_ref(x: jnp.ndarray, r: int, s: int, stride: int = 2) -> jnp.ndarray:
+    """Max-pool oracle: x [N, C, XI, YI] -> [N, C, XO, YO], VALID padding
+    (pool layer specs bake the window extent into the input, like conv)."""
+    return jax.lax.reduce_window(
+        x.astype(jnp.float32), -jnp.inf, jax.lax.max,
+        window_dimensions=(1, 1, r, s),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID").astype(x.dtype)
+
+
+def eltwise_ref(*xs: jnp.ndarray) -> jnp.ndarray:
+    """N-ary element-wise sum oracle (residual adds, gate merges; channel
+    concatenation is a sum of channel-embedded operands, see
+    ``lower.netexec``).  All operands must share one shape."""
+    out = xs[0].astype(jnp.float32)
+    for x in xs[1:]:
+        out = out + x.astype(jnp.float32)
+    return out.astype(xs[0].dtype)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True, window: int = 0,
                   logit_softcap: float = 0.0,

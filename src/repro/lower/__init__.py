@@ -1,21 +1,39 @@
 """Lowering subsystem: compile solved dataflow schemes into executable
 Pallas plans, execute/verify them, and calibrate the cost model against
-measured runtimes.
+measured runtimes — at two tiers:
 
-  solver (LayerScheme / NetworkSchedule)
-      -> plan.lower_scheme / plan.lower_schedule   (KernelPlan)
-      -> exec.execute_plan / verify_plan / measure_plan   (pl.pallas_call)
-      -> calibrate.run_calibration   (Spearman gate + fitted Calibration)
+  layer tier
+      solver (LayerScheme)
+          -> plan.lower_scheme                      (KernelPlan)
+          -> exec.execute_plan / verify_plan / measure_plan
+  network tier
+      solver (NetworkSchedule, or schedule.lower(graph, hw))
+          -> netplan.lower_network                  (NetworkPlan: ordered
+             kernel plans + segment buffer schedule w/ on-chip forwarding)
+          -> netexec.execute_network / verify_network / measure_network
+  calibration
+      calibrate.run_calibration          (per-kernel Spearman + fit)
+      calibrate.run_network_calibration  (end-to-end network Spearman)
 """
 from .plan import GridAxis, KernelPlan, lower_scheme, lower_schedule
 from .exec import (execute_plan, make_inputs, measure_plan,
                    reference_output, verify_plan)
-from .calibrate import (fit_calibration, run_calibration, save_record,
-                        spearman)
+from .netplan import (NetworkPlan, SegmentPlan, TensorPlacement,
+                      lower_network)
+from .netexec import (compare_network, execute_network, make_network_inputs,
+                      measure_network, network_runner, reference_network,
+                      verify_network)
+from .calibrate import (fit_calibration, run_calibration,
+                        run_network_calibration, save_record, spearman)
 
 __all__ = [
     "GridAxis", "KernelPlan", "lower_scheme", "lower_schedule",
     "execute_plan", "make_inputs", "measure_plan", "reference_output",
-    "verify_plan", "fit_calibration", "run_calibration", "save_record",
-    "spearman",
+    "verify_plan",
+    "NetworkPlan", "SegmentPlan", "TensorPlacement", "lower_network",
+    "compare_network", "execute_network", "make_network_inputs",
+    "measure_network", "network_runner", "reference_network",
+    "verify_network",
+    "fit_calibration", "run_calibration", "run_network_calibration",
+    "save_record", "spearman",
 ]

@@ -224,6 +224,97 @@ def run_calibration(hw: Optional[HWTemplate] = None, quick: bool = True,
     return record
 
 
+# ---------------------------------------------------------------------------
+# Network-level calibration: solve -> lower_network -> execute -> measure
+# ---------------------------------------------------------------------------
+
+def default_network_sweep(quick: bool = True):
+    """Real registered nets spanning ~2 orders of magnitude of work, every
+    layer kind executable (conv/fc/pool/eltwise), at batch sizes small
+    enough for interpret-mode end-to-end execution.  The full sweep's four
+    nets are the BENCH_network.json record; the quick pair is the CI
+    network-execution smoke gate."""
+    from ..workloads.nets import get_net, transformer
+    nets = [get_net("mlp", batch=4), transformer(batch=8, layers=2)]
+    if not quick:
+        nets += [get_net("lstm", batch=64), get_net("alexnet", batch=1)]
+    return nets
+
+
+def run_network_calibration(hw: Optional[HWTemplate] = None,
+                            quick: bool = True, nets=None,
+                            interpret: bool = True, iters: int = 2,
+                            seed: int = 0, tol: float = 1e-3) -> Dict:
+    """End-to-end network calibration: each net is solved, lowered to a
+    ``NetworkPlan``, verified against the whole-graph reference pass, and
+    its measured wall clock compared with the schedule's predicted
+    latency.  ``spearman_network`` is the network-granularity trust gate
+    (does the solver order whole nets the way execution does?), the
+    counterpart of the per-kernel gate in ``run_calibration``."""
+    from ..core.solver import solve
+    from .netexec import (compare_network, make_network_inputs,
+                          measure_network, network_runner)
+    from .netplan import lower_network
+
+    hw = hw if hw is not None else default_hw()
+    nets = list(nets) if nets is not None else default_network_sweep(quick)
+    entries: List[Dict] = []
+    skipped: List[Dict] = []
+    for net in nets:
+        schedule = solve(net, hw)
+        if not schedule.valid:
+            skipped.append({"net": net.name, "reason": "solve failed"})
+            continue
+        nplan = lower_network(schedule, net, hw)
+        bad = nplan.invalid_layers()
+        if bad:
+            skipped.append({"net": net.name,
+                            "reason": "; ".join(f"{n}: {r}"
+                                                for n, r in bad)})
+            continue
+        # one compiled runner serves verification, warmup and timing
+        inputs = make_network_inputs(nplan, seed)
+        run = network_runner(nplan, inputs, interpret=interpret, jit=True)
+        ver = compare_network(nplan, run(), inputs, tol)
+        entry = {
+            "net": net.name,
+            "n_layers": len(nplan.order),
+            "n_segments": len(nplan.segments),
+            "n_forwarded": ver.n_forwarded,
+            "forwarded": list(nplan.forwarded()),
+            "max_rel_err": ver.max_rel_err,
+            "worst_layer": ver.worst_layer,
+            "predicted_cycles": schedule.total_latency_cycles,
+            "predicted_seconds_raw":
+                schedule.total_latency_cycles / hw.freq_hz,
+            "predicted_energy_pj": schedule.total_energy_pj,
+            "solve_seconds": schedule.solve_seconds,
+        }
+        if not ver.ok:
+            # keep the rel error visible so numerics gates can still fire
+            # on nets excluded from the timing record
+            skipped.append({"net": net.name, "max_rel_err": ver.max_rel_err,
+                            "reason": f"numerics {ver.max_rel_err:.2e} "
+                                      f"at {ver.worst_layer}"})
+            continue
+        entry["measured_seconds"] = measure_network(
+            nplan, iters=iters, warmup=0, runner=run)
+        entries.append(entry)
+
+    record: Dict = {
+        "hw": hw.name,
+        "backend": "interpret" if interpret else "compiled",
+        "n_nets": len(entries),
+        "nets": entries,
+        "skipped": skipped,
+    }
+    if len(entries) >= 2:
+        record["spearman_network"] = spearman(
+            [e["predicted_cycles"] for e in entries],
+            [e["measured_seconds"] for e in entries])
+    return record
+
+
 def save_record(record: Dict, path: str) -> None:
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
@@ -237,4 +328,5 @@ def load_record(path: str) -> Dict:
 
 __all__ = ["spearman", "default_hw", "default_sweep", "scheme_variants",
            "fit_calibration", "run_calibration", "save_record",
-           "load_record", "Calibration"]
+           "load_record", "Calibration", "default_network_sweep",
+           "run_network_calibration"]

@@ -1,7 +1,7 @@
 """Execute ``KernelPlan``s through ``pl.pallas_call``.
 
 One generic Pallas kernel per supported layer family (matmul/fc, conv,
-attention), parameterized entirely by the plan: the grid is the solver's
+attention, pool, eltwise), parameterized entirely by the plan: the grid is the solver's
 DRAM-level loop nest (same order), the BlockSpecs carry the plan's block
 sizes and index maps, and reduction grid axes accumulate into the output
 block across revisits (initialized on the first visit, exactly like the
@@ -27,7 +27,7 @@ Notes on fidelity:
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -168,12 +168,90 @@ def _run_conv(plan: KernelPlan, x: jnp.ndarray, w: jnp.ndarray,
     )(x, w)
 
 
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# pool (max pooling; every grid axis is output-relevant: single visit)
+# ---------------------------------------------------------------------------
+
+def _run_pool(plan: KernelPlan, x: jnp.ndarray,
+              interpret: bool) -> jnp.ndarray:
+    layer = plan.layer
+    R = int(layer.meta["R"])
+    S = int(layer.meta["S"])
+    stride = int(layer.meta["stride"])
+    N, C = layer.dim("N"), layer.dim("C")
+    XO, YO = layer.dim("X"), layer.dim("Y")
+    XI, YI = x.shape[2], x.shape[3]
+    bn, bc = plan.block["N"], plan.block["C"]
+    bx, by = plan.block["X"], plan.block["Y"]
+    spanx = (bx - 1) * stride + R
+    spany = (by - 1) * stride + S
+    x_axis, y_axis = plan.axis_of("X"), plan.axis_of("Y")
+
+    def kern(x_ref, o_ref):
+        ix = pl.program_id(x_axis) if x_axis >= 0 else 0
+        iy = pl.program_id(y_axis) if y_axis >= 0 else 0
+        xw = jax.lax.dynamic_slice(
+            x_ref[...], (0, 0, ix * bx * stride, iy * by * stride),
+            (bn, bc, spanx, spany))
+        acc = jnp.full((bn, bc, bx, by), NEG_INF, jnp.float32)
+        for r in range(R):                     # window pinned in-block, like
+            for s in range(S):                 # conv's R/S
+                patch = jax.lax.slice(
+                    xw, (0, 0, r, s),
+                    (bn, bc, r + (bx - 1) * stride + 1,
+                     s + (by - 1) * stride + 1),
+                    (1, 1, stride, stride))
+                acc = jnp.maximum(acc, patch)
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kern,
+        grid=_grid(plan),
+        in_specs=[
+            # halo'd input: blocked over N/C, full spatial extent streamed
+            pl.BlockSpec((bn, bc, XI, YI), plan.index_map(("N", "C", "*",
+                                                           "*"))),
+        ],
+        out_specs=pl.BlockSpec((bn, bc, bx, by),
+                               plan.index_map(("N", "C", "X", "Y"))),
+        out_shape=jax.ShapeDtypeStruct((N, C, XO, YO), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# eltwise (n-ary sum; residual adds, gate merges, channel-embedded concat)
+# ---------------------------------------------------------------------------
+
+def _run_eltwise(plan: KernelPlan, xs: Sequence[jnp.ndarray],
+                 interpret: bool) -> jnp.ndarray:
+    layer = plan.layer
+    shape = tuple(layer.dim(d) for d in ("N", "C", "X", "Y"))
+    bshape = tuple(plan.block[d] for d in ("N", "C", "X", "Y"))
+
+    def kern(*refs):
+        acc = refs[0][...].astype(jnp.float32)
+        for r in refs[1:-1]:
+            acc = acc + r[...]
+        refs[-1][...] = acc
+
+    spec = pl.BlockSpec(bshape, plan.index_map(("N", "C", "X", "Y")))
+    return pl.pallas_call(
+        kern,
+        grid=_grid(plan),
+        in_specs=[spec] * len(xs),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shape, jnp.float32),
+        interpret=interpret,
+    )(*xs)
+
+
 # ---------------------------------------------------------------------------
 # attention (flash-style online softmax over KV-position blocks)
 # ---------------------------------------------------------------------------
-
-NEG_INF = -1e30
-
 
 def _run_attention(plan: KernelPlan, q: jnp.ndarray, k: jnp.ndarray,
                    v: jnp.ndarray, interpret: bool) -> jnp.ndarray:
@@ -228,10 +306,21 @@ def _run_attention(plan: KernelPlan, q: jnp.ndarray, k: jnp.ndarray,
 # Public API: inputs, execution, verification, measurement
 # ---------------------------------------------------------------------------
 
+def input_extent(layer) -> Tuple[int, int]:
+    """Minimal halo'd spatial input extent of a conv/pool layer under
+    VALID padding: (X-1)*stride + R — the single definition shared by the
+    layer-tier inputs and the network tier's shape plumbing."""
+    R, S = int(layer.meta["R"]), int(layer.meta["S"])
+    stride = int(layer.meta["stride"])
+    return ((layer.dim("X") - 1) * stride + R,
+            (layer.dim("Y") - 1) * stride + S)
+
+
 def make_inputs(plan: KernelPlan, seed: int = 0) -> Dict[str, jnp.ndarray]:
     """Deterministic dense float32 inputs matching the plan's canonical
     layouts (fc: I[N,C] W[C,K]; conv: I[N,C,XI,YI] W[K,C,R,S];
-    attention: Q/K/V [N, S, D])."""
+    attention: Q/K/V [N, S, D]; pool: I[N,C,XI,YI]; eltwise: A/B
+    [N,C,X,Y])."""
     layer = plan.layer
     keys = jax.random.split(jax.random.PRNGKey(seed), 3)
     if plan.kind == "fc":
@@ -242,9 +331,7 @@ def make_inputs(plan: KernelPlan, seed: int = 0) -> Dict[str, jnp.ndarray]:
                 * layer.dim("C") ** -0.5}
     if plan.kind == "conv":
         R, S = int(layer.meta["R"]), int(layer.meta["S"])
-        stride = int(layer.meta["stride"])
-        XI = (layer.dim("X") - 1) * stride + R
-        YI = (layer.dim("Y") - 1) * stride + S
+        XI, YI = input_extent(layer)
         fan_in = layer.dim("C") * R * S
         return {"I": jax.random.normal(
                     keys[0], (layer.dim("N"), layer.dim("C"), XI, YI),
@@ -258,6 +345,14 @@ def make_inputs(plan: KernelPlan, seed: int = 0) -> Dict[str, jnp.ndarray]:
         return {"Q": jax.random.normal(keys[0], (NH, Sq, D), jnp.float32),
                 "K": jax.random.normal(keys[1], (NH, Skv, D), jnp.float32),
                 "V": jax.random.normal(keys[2], (NH, Skv, D), jnp.float32)}
+    if plan.kind == "pool":
+        XI, YI = input_extent(layer)
+        return {"I": jax.random.normal(
+            keys[0], (layer.dim("N"), layer.dim("C"), XI, YI), jnp.float32)}
+    if plan.kind == "eltwise":
+        shape = tuple(layer.dim(d) for d in ("N", "C", "X", "Y"))
+        return {"A": jax.random.normal(keys[0], shape, jnp.float32),
+                "B": jax.random.normal(keys[1], shape, jnp.float32)}
     raise ValueError(f"unsupported kind {plan.kind!r}")
 
 
@@ -267,7 +362,9 @@ def plan_runner(plan: KernelPlan, interpret: bool = True,
     ``jit=True`` the whole pallas_call is staged once and re-invocations
     time the compiled executable (the measurement path)."""
     if not plan.valid:
-        raise ValueError(f"cannot execute invalid plan: {plan.reason}")
+        raise ValueError(
+            f"cannot execute invalid plan for layer {plan.layer.name!r}: "
+            f"{plan.invalid_reason}")
     if not interpret:
         _check_compiled_revisit_order(plan)
     if plan.kind == "fc":
@@ -279,6 +376,11 @@ def plan_runner(plan: KernelPlan, interpret: bool = True,
     elif plan.kind == "attention":
         names, base = ("Q", "K", "V"), \
             lambda q, k, v: _run_attention(plan, q, k, v, interpret)
+    elif plan.kind == "pool":
+        names, base = ("I",), lambda i: _run_pool(plan, i, interpret)
+    elif plan.kind == "eltwise":
+        names, base = ("A", "B"), \
+            lambda a, b: _run_eltwise(plan, (a, b), interpret)
     else:
         raise ValueError(f"unsupported kind {plan.kind!r}")
     fn = jax.jit(base) if jit else base
@@ -288,8 +390,9 @@ def plan_runner(plan: KernelPlan, interpret: bool = True,
 def execute_plan(plan: KernelPlan, inputs: Optional[Dict] = None,
                  interpret: bool = True, seed: int = 0) -> jnp.ndarray:
     """Run the plan through ``pl.pallas_call`` and return the output."""
+    run = plan_runner(plan, interpret)       # refuses invalid plans first,
     inputs = inputs if inputs is not None else make_inputs(plan, seed)
-    return plan_runner(plan, interpret)(inputs)
+    return run(inputs)                       # naming the layer + reason
 
 
 def reference_output(plan: KernelPlan, inputs: Dict) -> jnp.ndarray:
@@ -303,6 +406,12 @@ def reference_output(plan: KernelPlan, inputs: Dict) -> jnp.ndarray:
         out = ref.attention_ref(inputs["Q"][:, None], inputs["K"][:, None],
                                 inputs["V"][:, None], causal=False)
         return out[:, 0]
+    if plan.kind == "pool":
+        return ref.pool2d_ref(inputs["I"], int(plan.layer.meta["R"]),
+                              int(plan.layer.meta["S"]),
+                              stride=int(plan.layer.meta["stride"]))
+    if plan.kind == "eltwise":
+        return ref.eltwise_ref(inputs["A"], inputs["B"])
     raise ValueError(f"unsupported kind {plan.kind!r}")
 
 

@@ -1,0 +1,352 @@
+"""Execute a ``NetworkPlan`` end-to-end through ``pl.pallas_call``.
+
+The layer tier (``exec.py``) runs one kernel; this module chains every
+kernel of a lowered network in topological order, realizing the plan's
+buffer schedule:
+
+  * **forwarded** tensors (segment-internal, see ``netplan``) stay live
+    jax arrays handed directly from the producing kernel to its
+    consumers — never materialized through a host round-trip;
+  * **boundary** tensors are materialized to host numpy after the
+    producer and re-uploaded when consumed — the execution analogue of a
+    DRAM store + reload.
+
+Layer graphs are analytical specs, so producer/consumer shapes line up
+only approximately (conv halos, flattening before FC, LSTM gate merges,
+inception concat).  A single canonical **adapter** closes the gap, used
+identically by the executor and the whole-graph reference pass
+(``reference_network``) so rel-error comparisons are apples-to-apples:
+
+  1. equal per-batch size        -> reshape (flatten before FC, 2-D<->4-D);
+  2. channel-matched 4-D tensors -> centered zero-pad / crop of the
+     spatial dims (reproduces e.g. AlexNet's conv padding exactly);
+  3. divisible per-batch size    -> fold-sum over the leading groups
+     (LSTM gate merge: 4*hidden -> hidden);
+
+and multi-source eltwise layers whose channel counts partition the output
+(inception concat) embed each source at its channel offset, so the n-ary
+sum kernel computes the concatenation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ref
+from ..workloads.layers import LayerSpec
+from .exec import (_check_compiled_revisit_order, _run_conv, _run_eltwise,
+                   _run_fc, _run_pool, input_extent, rel_error)
+from .netplan import NetworkPlan
+
+
+# ---------------------------------------------------------------------------
+# shapes + the canonical adapter
+# ---------------------------------------------------------------------------
+
+
+def required_input_shape(layer: LayerSpec) -> Tuple[int, ...]:
+    """Canonical input-activation shape each kernel consumes."""
+    if layer.kind == "fc":
+        return (layer.dim("N"), layer.dim("C"))
+    if layer.kind in ("conv", "pool"):
+        XI, YI = input_extent(layer)
+        return (layer.dim("N"), layer.dim("C"), XI, YI)
+    if layer.kind == "eltwise":
+        return (layer.dim("N"), layer.dim("C"), layer.dim("X"),
+                layer.dim("Y"))
+    raise ValueError(f"no network-exec input feed for kind {layer.kind!r}")
+
+
+def adapt_tensor(arr: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Adapt a producer output to a consumer's required input shape (see
+    module docstring for the three rules)."""
+    arr = jnp.asarray(arr)
+    if tuple(arr.shape) == tuple(shape):
+        return arr
+    n = shape[0]
+    src_per = int(np.prod(arr.shape[1:]))
+    dst_per = int(np.prod(shape[1:]))
+    if src_per == dst_per:
+        return arr.reshape(shape)
+    if arr.ndim == 4 and len(shape) == 4 and arr.shape[1] == shape[1]:
+        out = arr
+        for ax in (2, 3):
+            d = shape[ax] - out.shape[ax]
+            if d > 0:
+                pad = [(0, 0)] * 4
+                pad[ax] = (d // 2, d - d // 2)
+                out = jnp.pad(out, pad)
+            elif d < 0:
+                lo = (-d) // 2
+                out = jax.lax.slice_in_dim(out, lo, lo + shape[ax], axis=ax)
+        return out
+    if src_per % dst_per == 0:
+        k = src_per // dst_per
+        return arr.reshape((n, k, dst_per)).sum(axis=1).reshape(shape)
+    raise ValueError(f"cannot adapt shape {tuple(arr.shape)} -> "
+                     f"{tuple(shape)}")
+
+
+def _eltwise_operands(srcs: Sequence[jnp.ndarray],
+                      layer: LayerSpec) -> List[jnp.ndarray]:
+    """Adapt eltwise sources to the output shape.  When the sources'
+    channel counts partition the output channels (inception concat), each
+    source is embedded at its channel offset so the sum kernel computes
+    the concatenation; otherwise every source adapts independently and
+    the kernel computes a plain sum (residual add, gate merge)."""
+    shape = required_input_shape(layer)
+    C = shape[1]
+    chans = [a.shape[1] if a.ndim == 4 else -1 for a in srcs]
+    if len(srcs) > 1 and all(c > 0 for c in chans) and sum(chans) == C \
+            and any(c != C for c in chans):
+        out, off = [], 0
+        for a, c in zip(srcs, chans):
+            a4 = adapt_tensor(a, (shape[0], c, shape[2], shape[3]))
+            out.append(jnp.pad(a4, ((0, 0), (off, C - off - c),
+                                    (0, 0), (0, 0))))
+            off += c
+        return out
+    return [adapt_tensor(a, shape) for a in srcs]
+
+
+# ---------------------------------------------------------------------------
+# deterministic network inputs (external activations + per-layer weights)
+# ---------------------------------------------------------------------------
+
+def _key(seed: int, name: str) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(seed),
+                              zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+def make_network_inputs(nplan: NetworkPlan,
+                        seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """``"<layer>.I"`` external activations for graph sources and
+    ``"<layer>.W"`` weights for conv/fc layers, variance-scaled so
+    activations stay O(1) through deep graphs."""
+    inputs: Dict[str, jnp.ndarray] = {}
+    for name in nplan.order:
+        layer = nplan.plans[name].layer
+        if not any(s in nplan.plans for s in layer.src):
+            inputs[f"{name}.I"] = jax.random.normal(
+                _key(seed, name + ".I"), required_input_shape(layer),
+                jnp.float32)
+        if layer.kind == "fc":
+            inputs[f"{name}.W"] = jax.random.normal(
+                _key(seed, name + ".W"),
+                (layer.dim("C"), layer.dim("K")), jnp.float32) \
+                * layer.dim("C") ** -0.5
+        elif layer.kind == "conv":
+            R, S = int(layer.meta["R"]), int(layer.meta["S"])
+            fan_in = layer.dim("C") * R * S
+            inputs[f"{name}.W"] = jax.random.normal(
+                _key(seed, name + ".W"),
+                (layer.dim("K"), layer.dim("C"), R, S), jnp.float32) \
+                * fan_in ** -0.5
+    return inputs
+
+
+# ---------------------------------------------------------------------------
+# per-layer step functions + the execution chain
+# ---------------------------------------------------------------------------
+
+def _layer_fn(nplan: NetworkPlan, name: str, inputs: Dict,
+              interpret: bool) -> Tuple[Callable, Tuple[str, ...]]:
+    """(fn, src_names): ``fn(*src_arrays) -> output`` for one layer, with
+    the shape adapter folded in (so the whole step jits as one unit)."""
+    plan = nplan.plans[name]
+    layer = plan.layer
+    srcs = tuple(s for s in layer.src if s in nplan.plans)
+    w = inputs.get(f"{name}.W")
+    ext = inputs.get(f"{name}.I")
+    shape = required_input_shape(layer)
+
+    if plan.kind == "fc":
+        def fn(*xs):
+            return _run_fc(plan, adapt_tensor(xs[0] if xs else ext, shape),
+                           w, interpret)
+    elif plan.kind == "conv":
+        def fn(*xs):
+            return _run_conv(plan, adapt_tensor(xs[0] if xs else ext,
+                                                shape), w, interpret)
+    elif plan.kind == "pool":
+        def fn(*xs):
+            return _run_pool(plan, adapt_tensor(xs[0] if xs else ext,
+                                                shape), interpret)
+    elif plan.kind == "eltwise":
+        def fn(*xs):
+            ops = _eltwise_operands(list(xs) if xs else [ext], layer)
+            return _run_eltwise(plan, ops, interpret)
+    else:
+        raise ValueError(f"cannot execute layer {name!r}: kind "
+                         f"{plan.kind!r} has no network-exec input feed")
+    return fn, srcs
+
+
+@dataclasses.dataclass
+class NetworkExecution:
+    """Outputs of one end-to-end network run plus the realized buffer
+    schedule (which tensors stayed on-chip vs round-tripped)."""
+
+    outputs: Dict[str, jnp.ndarray]
+    forwarded: Tuple[str, ...]      # handed on-chip, never left the device
+    roundtrips: Tuple[str, ...]     # materialized to host numpy
+    seconds: float
+
+
+def _check_executable(nplan: NetworkPlan) -> None:
+    bad = nplan.invalid_layers()
+    if bad:
+        raise ValueError(
+            f"network plan {nplan.graph_name!r} is not executable: "
+            + "; ".join(f"{n}: {r}" for n, r in bad))
+
+
+def network_runner(nplan: NetworkPlan, inputs: Dict,
+                   interpret: bool = True,
+                   jit: bool = True) -> Callable[[], NetworkExecution]:
+    """Build a reusable ``() -> NetworkExecution`` for the plan.
+
+    Forwarded tensors are passed between kernels as live jax arrays;
+    boundary tensors are materialized to host numpy (``np.asarray``) and
+    re-uploaded at the consumer — the host round-trip that models the
+    DRAM boundary.  With ``jit=True`` each layer step (adapter + kernel)
+    is staged once and re-invocations reuse the compiled executables
+    (the measurement path).
+    """
+    _check_executable(nplan)
+    if not interpret:
+        # compiled Pallas cannot accumulate across non-consecutive output-
+        # block revisits: apply the layer tier's guard to every plan
+        for name in nplan.order:
+            _check_compiled_revisit_order(nplan.plans[name])
+    steps = []
+    for name in nplan.order:
+        fn, srcs = _layer_fn(nplan, name, inputs, interpret)
+        steps.append((name, jax.jit(fn) if jit else fn, srcs,
+                      nplan.placements[name].forwarded))
+
+    def run() -> NetworkExecution:
+        t0 = time.perf_counter()
+        onchip: Dict[str, jnp.ndarray] = {}
+        host: Dict[str, np.ndarray] = {}
+        for name, fn, srcs, fwd in steps:
+            args = [onchip[s] if s in onchip else jnp.asarray(host[s])
+                    for s in srcs]
+            out = fn(*args)
+            if fwd:
+                onchip[name] = out              # stays a live device array
+            else:
+                host[name] = np.asarray(out)    # the host round-trip
+        for v in onchip.values():
+            jax.block_until_ready(v)
+        seconds = time.perf_counter() - t0
+        outputs = {**onchip,
+                   **{k: jnp.asarray(v) for k, v in host.items()}}
+        return NetworkExecution(outputs=outputs, forwarded=tuple(onchip),
+                                roundtrips=tuple(host), seconds=seconds)
+    return run
+
+
+def execute_network(nplan: NetworkPlan, inputs: Optional[Dict] = None,
+                    interpret: bool = True, seed: int = 0,
+                    jit: bool = True) -> NetworkExecution:
+    """Run every kernel of the plan in topological order (one-shot
+    convenience over ``network_runner``)."""
+    inputs = inputs if inputs is not None else make_network_inputs(nplan,
+                                                                   seed)
+    return network_runner(nplan, inputs, interpret=interpret, jit=jit)()
+
+
+# ---------------------------------------------------------------------------
+# whole-graph reference forward pass + verification
+# ---------------------------------------------------------------------------
+
+def reference_network(nplan: NetworkPlan,
+                      inputs: Dict) -> Dict[str, jnp.ndarray]:
+    """Ground truth: the same graph evaluated with the ``kernels/ref.py``
+    oracles and the same canonical adapters, in the same order."""
+    vals: Dict[str, jnp.ndarray] = {}
+    for name in nplan.order:
+        layer = nplan.plans[name].layer
+        srcs = [vals[s] for s in layer.src if s in vals]
+        shape = required_input_shape(layer)
+        x = adapt_tensor(srcs[0], shape) if srcs else inputs[f"{name}.I"]
+        if layer.kind == "fc":
+            vals[name] = ref.matmul_ref(x, inputs[f"{name}.W"])
+        elif layer.kind == "conv":
+            vals[name] = ref.conv2d_ref(x, inputs[f"{name}.W"],
+                                        stride=int(layer.meta["stride"]))
+        elif layer.kind == "pool":
+            vals[name] = ref.pool2d_ref(x, int(layer.meta["R"]),
+                                        int(layer.meta["S"]),
+                                        stride=int(layer.meta["stride"]))
+        elif layer.kind == "eltwise":
+            ops = _eltwise_operands(srcs if srcs else [inputs[f"{name}.I"]],
+                                    layer)
+            vals[name] = ref.eltwise_ref(*ops)
+        else:
+            raise ValueError(f"no oracle for kind {layer.kind!r}")
+    return vals
+
+
+@dataclasses.dataclass
+class NetworkVerification:
+    ok: bool
+    max_rel_err: float
+    worst_layer: str
+    errors: Dict[str, float]
+    n_forwarded: int
+
+
+def compare_network(nplan: NetworkPlan, ex: NetworkExecution,
+                    inputs: Dict, tol: float = 1e-3) -> NetworkVerification:
+    """Compare **every** layer output of an execution against the
+    whole-graph reference pass (per-layer max relative error) — the one
+    comparison rule shared by ``verify_network``, the calibration sweep
+    and callers reusing a ``network_runner``."""
+    want = reference_network(nplan, inputs)
+    errors = {n: rel_error(ex.outputs[n], want[n]) for n in nplan.order}
+    worst = max(errors, key=errors.get)
+    return NetworkVerification(
+        ok=errors[worst] < tol, max_rel_err=errors[worst],
+        worst_layer=worst, errors=errors, n_forwarded=len(ex.forwarded))
+
+
+def verify_network(nplan: NetworkPlan, interpret: bool = True,
+                   seed: int = 0, tol: float = 1e-3,
+                   jit: bool = True) -> NetworkVerification:
+    """Execute the plan and compare against the whole-graph reference
+    (one-shot convenience over ``compare_network``)."""
+    inputs = make_network_inputs(nplan, seed)
+    ex = execute_network(nplan, inputs, interpret=interpret, jit=jit)
+    return compare_network(nplan, ex, inputs, tol)
+
+
+def measure_network(nplan: NetworkPlan, inputs: Optional[Dict] = None,
+                    interpret: bool = True, iters: int = 2,
+                    warmup: int = 1,
+                    runner: Optional[Callable[[], NetworkExecution]] = None,
+                    ) -> float:
+    """Measured wall-clock seconds for one end-to-end network execution
+    (min over ``iters`` after ``warmup`` runs compile every layer step).
+    Includes the buffer schedule's real host round-trips — network time,
+    not a sum of isolated kernel times.
+
+    Pass an existing ``network_runner`` (with ``warmup=0`` if it already
+    ran, e.g. for verification) to reuse its compiled steps — the single
+    timing protocol behind the calibration sweep and the quickstart."""
+    if runner is None:
+        inputs = inputs if inputs is not None \
+            else make_network_inputs(nplan)
+        runner = network_runner(nplan, inputs, interpret=interpret,
+                                jit=True)
+        warmup = max(1, warmup)         # fresh steps always need a compile
+    for _ in range(warmup):
+        runner()
+    return min(runner().seconds for _ in range(max(1, iters)))

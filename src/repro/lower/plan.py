@@ -33,7 +33,7 @@ from ..workloads.layers import DIMS, LayerSpec
 from ..core.cost_model import CostBreakdown, evaluate_layer
 from ..core.directives import LayerScheme, smallest_prime_factor
 
-SUPPORTED_KINDS = ("conv", "fc", "attention")
+SUPPORTED_KINDS = ("conv", "fc", "attention", "pool", "eltwise")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +55,11 @@ class KernelPlan:
     reason: str = ""
     level_footprints: Tuple[float, ...] = ()   # bytes per on-chip level
     predicted: Optional[CostBreakdown] = None  # detailed-model standalone cost
+
+    @property
+    def invalid_reason(self) -> str:
+        """Why the plan cannot execute ("" for valid plans)."""
+        return "" if self.valid else self.reason
 
     @property
     def grid_shape(self) -> Tuple[int, ...]:
@@ -171,8 +176,8 @@ def lower_scheme(scheme: LayerScheme, hw: HWTemplate,
         return _invalid(scheme, kind, "level count mismatch")
     if not scheme.validate_factors():
         return _invalid(scheme, kind, "factors do not multiply to dims")
-    if kind == "conv" and not {"R", "S", "stride"} <= set(layer.meta):
-        return _invalid(scheme, kind, "conv layer lacks R/S/stride meta")
+    if kind in ("conv", "pool") and not {"R", "S", "stride"} <= set(layer.meta):
+        return _invalid(scheme, kind, f"{kind} layer lacks R/S/stride meta")
 
     if kind == "attention":
         reshaped = _repair_attention(scheme, hw) if repair else \

@@ -15,7 +15,7 @@ from repro.lower import (execute_plan, lower_scheme, lower_schedule,
                          verify_plan)
 from repro.lower.calibrate import (default_hw, run_calibration,
                                    scheme_variants, spearman)
-from repro.workloads.layers import attention, conv, fc
+from repro.workloads.layers import attention, conv, dwconv, eltwise, fc, pool
 from repro.workloads.nets import get_net
 
 # small node grid so realistic layers overflow on-chip capacity and the
@@ -38,6 +38,10 @@ SWEEP = [
     conv("t.conv.str2", 2, 32, 64, 28, 28, 3, 3, stride=2),
     attention("t.attn.s", 2, 2, 128, 64),
     attention("t.attn.m", 2, 4, 256, 64),
+    pool("t.pool.s", 2, 16, 13, 13, 3, 3),
+    pool("t.pool.str", 1, 96, 27, 27, 3, 3, stride=2),
+    eltwise("t.elt.s", 2, 64, 14, 14),
+    eltwise("t.elt.flat", 8, 512, 1, 1),
 ]
 
 
@@ -107,14 +111,15 @@ def test_attention_head_dim_split_is_repaired():
 
 
 def test_unsupported_kind_is_invalid_not_crash():
-    from repro.workloads.layers import pool
-    layer = pool("t.pool", 2, 8, 7, 7, 2, 2)
+    layer = dwconv("t.dw", 2, 8, 7, 7, 3, 3)
     scheme, cost = solve_intra_layer(layer, HW,
                                      Constraints(nodes=HW.node_array))
     assert scheme is not None and cost.valid
     plan = lower_scheme(scheme, HW)
     assert not plan.valid and "unsupported" in plan.reason
-    with pytest.raises(ValueError):
+    assert plan.invalid_reason == plan.reason
+    # the refusal names the layer AND carries the lowering-time reason
+    with pytest.raises(ValueError, match=r"t\.dw.*unsupported"):
         execute_plan(plan)
 
 
@@ -124,15 +129,35 @@ def test_lower_schedule_covers_solved_network():
     assert sched.valid
     plans = lower_schedule(sched, net, HW)
     assert set(plans) == set(sched.layer_schemes)
+    # conv, fc AND pool are all supported now: alexnet lowers completely
+    for name, plan in plans.items():
+        assert plan.valid, f"{name}: {plan.reason}"
+    # execute one lowered conv and one pool end to end against the oracles
+    for name in ("conv3", "pool2"):
+        ok, err = verify_plan(plans[name])
+        assert ok, f"{name} rel err {err:.2e}"
+
+
+def test_training_graph_lowers_without_crash():
+    # backward-data / backward-weight layers have no kernels yet: they must
+    # come back as invalid plans with a clear reason, never exceptions
+    net = get_net("mlp", batch=8, training=True)
+    sched = solve(net, HW)
+    assert sched.valid
+    plans = lower_schedule(sched, net, HW)
+    assert set(plans) == set(sched.layer_schemes)
+    kinds_seen = set()
     for name, plan in plans.items():
         kind = net.by_name[name].kind
-        if kind in ("conv", "fc"):
+        kinds_seen.add(kind)
+        if kind == "fc":
             assert plan.valid, f"{name}: {plan.reason}"
         else:
-            assert not plan.valid
-    # execute one lowered conv end to end against the oracle
-    ok, err = verify_plan(plans["conv3"])
-    assert ok, f"conv3 rel err {err:.2e}"
+            assert not plan.valid, name
+            assert "unsupported" in plan.reason and kind in plan.reason
+            with pytest.raises(ValueError, match=name.replace(".", r"\.")):
+                execute_plan(plan)
+    assert {"fc", "fc_bd", "fc_bw"} <= kinds_seen
 
 
 # ---------------------------------------------------------------------------
