@@ -3,7 +3,10 @@ inter-layer level vs the scalar PR-1 baseline, and end-to-end solve times,
 emitted as a JSON perf record (``BENCH_solver.json`` at the repo root) to
 track the repo's bench trajectory.  ``--calibrate``/``--network`` add the
 lowering sweeps (per-kernel and whole-network), written to
-``BENCH_calibration.json`` / ``BENCH_network.json``.
+``BENCH_calibration.json`` / ``BENCH_network.json``; ``--service`` adds
+the schedule-service sweep (cold vs warm vs cached solve latency through
+the store, plus measured top-k autotuning), written to
+``BENCH_service.json``.
 
     python benchmarks/bench_solver_speed.py [--quick] [--out perf.json]
 
@@ -220,6 +223,76 @@ def bench_network(quick: bool) -> dict:
     }
 
 
+def bench_service(quick: bool) -> dict:
+    """Schedule-service sweep: cold vs warm vs cached solve latency on
+    resnet/b64 through a fresh store, then measured top-k autotuning (the
+    acceptance workload: lower + execute k candidates per net, promote the
+    measured winner).  Full record -> BENCH_service.json; the main record
+    keeps a summary."""
+    import shutil
+    import tempfile
+    from repro.lower.calibrate import default_hw, save_record
+    from repro.service import LocalClient, ScheduleStore, autotune_network
+    from repro.workloads.nets import transformer as transformer_net
+
+    hw = eyeriss_multinode()
+    root = tempfile.mkdtemp(prefix="repro-service-bench-")
+    try:
+        client = LocalClient(ScheduleStore(root))
+        # cold: fresh process caches + fresh graph objects (candidate
+        # batches are memoized on the graph)
+        memo.clear_all()
+        r_cold = client.solve(get_net("resnet", batch=64), hw)
+        assert r_cold.source == "cold" and r_cold.schedule.valid
+        # warm: family near-miss (same net, batch 32) seeds the solve; its
+        # fair baseline is a cold batch-32 solve in a fresh store
+        memo.clear_all()
+        t0 = time.perf_counter()
+        cold32 = solve(get_net("resnet", batch=32), hw)
+        cold32_s = time.perf_counter() - t0
+        assert cold32.valid
+        memo.clear_all()
+        r_warm = client.solve(get_net("resnet", batch=32), hw)
+        # cached: the batch-64 signature again, process caches cold
+        memo.clear_all()
+        r_cached = client.solve(get_net("resnet", batch=64), hw)
+        assert r_cached.source == "cached"
+        assert r_cached.schedule.total_energy_pj == \
+            r_cold.schedule.total_energy_pj
+        record = {
+            "net": "resnet/b64",
+            "cold_seconds": r_cold.seconds,
+            "cached_seconds": r_cached.seconds,
+            "cached_speedup": r_cold.seconds / r_cached.seconds,
+            "warm_net": "resnet/b32",
+            "warm_source": r_warm.source,
+            "warm_seconds": r_warm.seconds,
+            "warm_cold_baseline_seconds": cold32_s,
+            "warm_speedup": cold32_s / r_warm.seconds,
+            "warm_energy_ratio_vs_cold":
+                r_warm.schedule.total_energy_pj / cold32.total_energy_pj,
+            "store": client.stats(),
+        }
+        # measured top-k autotuning on the small-grid execution hardware
+        hw_exec = default_hw()
+        nets = [get_net("mlp", batch=4)]
+        if not quick:
+            nets.append(transformer_net(batch=8, layers=2))
+        at = []
+        for net in nets:
+            rep = autotune_network(net, hw_exec, store=client.store, k=3,
+                                   iters=1 if quick else 2)
+            at.append({k: rep.get(k) for k in (
+                "net", "n_candidates", "n_executed", "rank_agreement",
+                "promoted_rank", "promoted_measured_seconds",
+                "argmin_measured_seconds", "autotune_seconds", "skipped")})
+        record["autotune"] = at
+        save_record(record, os.path.join(REPO_ROOT, "BENCH_service.json"))
+        return record
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def bench_calibration(quick: bool) -> dict:
     """Solver -> lowering -> pallas execution -> measured-vs-predicted
     calibration sweep (repro.lower.calibrate).  The full per-pair record is
@@ -286,13 +359,26 @@ def main(argv=None) -> int:
     ap.add_argument("--min-network-spearman", type=float, default=None,
                     help="exit nonzero if network-level predicted-vs-"
                     "measured Spearman is below this")
+    ap.add_argument("--service", action="store_true",
+                    help="also run the schedule-service sweep (writes "
+                    "BENCH_service.json)")
+    ap.add_argument("--service-only", action="store_true",
+                    help="run ONLY the schedule-service sweep (the CI "
+                    "service smoke gate)")
+    ap.add_argument("--min-service-cached-speedup", type=float,
+                    default=None,
+                    help="exit nonzero if the store-cached resnet/b64 "
+                    "solve is not at least this much faster than cold")
+    ap.add_argument("--min-autotune-candidates", type=int, default=None,
+                    help="exit nonzero if any autotuned net executed "
+                    "fewer candidates than this")
     args = ap.parse_args(argv)
-    only = args.calibrate_only or args.network_only
+    only = args.calibrate_only or args.network_only or args.service_only
     if only and (args.min_speedup is not None
                  or args.min_interlayer_speedup is not None
                  or args.max_transformer_seconds is not None):
-        ap.error("--calibrate-only/--network-only skip the solver benches; "
-                 "drop them or drop the solver gate flags")
+        ap.error("--calibrate-only/--network-only/--service-only skip the "
+                 "solver benches; drop them or drop the solver gate flags")
 
     hw = eyeriss_multinode()
     n_schemes = 2000 if args.quick else 20000
@@ -304,6 +390,9 @@ def main(argv=None) -> int:
     elif args.network_only:
         record = {"quick": args.quick,
                   "network": bench_network(args.quick)}
+    elif args.service_only:
+        record = {"quick": args.quick,
+                  "service": bench_service(args.quick)}
     else:
         record = {
             "quick": args.quick,
@@ -317,6 +406,8 @@ def main(argv=None) -> int:
             record["calibration"] = bench_calibration(args.quick)
         if args.network:
             record["network"] = bench_network(args.quick)
+        if args.service:
+            record["service"] = bench_service(args.quick)
     text = json.dumps(record, indent=2)
     print(text)
     # BENCH_solver.json at the repo root is the perf-trajectory record
@@ -368,6 +459,32 @@ def main(argv=None) -> int:
         elif nw["spearman_network"] < args.min_network_spearman:
             fails.append(f"network spearman {nw['spearman_network']:.3f} < "
                          f"{args.min_network_spearman}")
+    sv = record.get("service")
+    if args.min_service_cached_speedup is not None:
+        if sv is None:
+            fails.append("service gate set but sweep did not run "
+                         "(pass --service)")
+        elif sv["cached_speedup"] < args.min_service_cached_speedup:
+            fails.append(f"service cached speedup "
+                         f"{sv['cached_speedup']:.1f}x < "
+                         f"{args.min_service_cached_speedup}x")
+    if args.min_autotune_candidates is not None:
+        if sv is None:
+            fails.append("autotune gate set but sweep did not run "
+                         "(pass --service)")
+        else:
+            worst = min((a["n_executed"] for a in sv["autotune"]),
+                        default=0)
+            if worst < args.min_autotune_candidates:
+                fails.append(f"autotune executed {worst} candidates < "
+                             f"{args.min_autotune_candidates}")
+            bad = [a["net"] for a in sv["autotune"]
+                   if a.get("argmin_measured_seconds") is not None
+                   and a["promoted_measured_seconds"]
+                   > a["argmin_measured_seconds"]]
+            if bad:
+                fails.append("autotune promoted slower-than-argmin "
+                             f"schedules on {bad}")
     if only:
         for f_ in fails:
             print("FAIL:", f_, file=sys.stderr)

@@ -2,12 +2,14 @@
 """Quickstart: KAPLA schedules AlexNet on the 16x16-node Eyeriss-like
 accelerator and prints the winning tensor-centric directives (paper
 Listing-1 style), the energy/latency, and a comparison with random search.
-Then the winning scheme for one conv layer is LOWERED to a Pallas kernel
-plan and executed (interpret mode on CPU), and finally the WHOLE batch-1
-schedule is compiled to a NetworkPlan and executed end-to-end — segment
-pipelining, on-chip forwarding and all — printing predicted-vs-measured
-latency at both tiers: the full solver -> silicon-facing pipeline in one
-script.
+The solve routes through the SCHEDULE SERVICE (LocalClient over a
+content-addressed store), and a repeated request demonstrates the cached
+path: a store hit instead of a re-solve.  Then the winning scheme for one
+conv layer is LOWERED to a Pallas kernel plan and executed (interpret
+mode on CPU), and finally the WHOLE batch-1 schedule is compiled to a
+NetworkPlan and executed end-to-end — segment pipelining, on-chip
+forwarding and all — printing predicted-vs-measured latency at both
+tiers: the full solver -> store -> silicon-facing pipeline in one script.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -20,11 +22,15 @@ except ImportError:      # fallback: resolve src/ relative to this file so
     sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                     "..", "src"))
 
+import atexit
+import tempfile
+
 from repro.core.solver import random_search, solve
 from repro.hw.presets import eyeriss_multinode
 from repro.lower import (compare_network, lower_scheme, make_inputs,
                          make_network_inputs, measure_network, measure_plan,
                          network_runner, verify_plan)
+from repro.service import LocalClient, ScheduleStore
 from repro.workloads.nets import get_net
 
 
@@ -34,7 +40,14 @@ def main():
     print(f"scheduling {net.name}: {len(net)} layers on {hw.name} "
           f"({hw.total_pes} PEs)")
 
-    res = solve(net, hw)
+    # solves route through the schedule service: a content-addressed store
+    # keeps every winner, so only the first request pays the solver
+    store_dir = tempfile.TemporaryDirectory(
+        prefix="repro-quickstart-store-")
+    atexit.register(store_dir.cleanup)
+    client = LocalClient(ScheduleStore(store_dir.name))
+    first = client.solve(net, hw)
+    res = first.schedule
     print(f"\nKAPLA: energy {res.total_energy_pj / 1e9:.2f} mJ, "
           f"latency {res.total_latency_cycles / hw.freq_hz * 1e3:.2f} ms, "
           f"solved in {res.solve_seconds:.2f} s")
@@ -52,6 +65,16 @@ def main():
     rnd = random_search.solve(net, hw, samples=500)
     print(f"\nrandom search: {rnd.total_energy_pj / res.total_energy_pj:.2f}x"
           " KAPLA energy")
+
+    # --- same request again: served from the store, not re-solved ----------
+    second = client.solve(get_net("alexnet", batch=64), hw)
+    st = client.stats()
+    print(f"\nschedule service: first solve source={first.source} "
+          f"({first.seconds * 1e3:.0f} ms), second source={second.source} "
+          f"({second.seconds * 1e3:.1f} ms, "
+          f"{first.seconds / second.seconds:.0f}x faster) | "
+          f"store hits={st['hits']} misses={st['misses']}")
+    assert second.schedule.total_energy_pj == res.total_energy_pj
 
     # --- lower the winning scheme for one layer and actually run it --------
     # (batch 1 keeps the interpret-mode execution snappy on CPU)

@@ -25,6 +25,7 @@ than derived by subtraction.  Parity is enforced by
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Tuple
 
 import numpy as np
@@ -126,6 +127,22 @@ def pack_graph(graph: LayerGraph, hw: HWTemplate) -> GraphPack:
             max_cons[i] = max(cons[i])
     return GraphPack(n, macs, bpe, ifmap, ofmap, base_e, dram_var,
                      src_ok, min_src, max_src, has_cons, min_cons, max_cons)
+
+
+def pack_fingerprint(gp: GraphPack) -> bytes:
+    """Deterministic digest of a ``GraphPack``'s arrays — the per-layer
+    numeric content the inter-layer solver actually consumes, with layer
+    *identity* (names) already stripped by construction.  Renaming layers
+    leaves the digest unchanged; reordering, reshaping or re-batching any
+    layer changes it.  The schedule store's content signatures
+    (``repro.service.signature``) are built on this."""
+    h = hashlib.sha256()
+    h.update(str(gp.n_layers).encode())
+    for arr in (gp.macs, gp.bytes_per_elem, gp.ifmap, gp.ofmap,
+                gp.base_energy, gp.dram_variants, gp.src_ok, gp.min_src,
+                gp.max_src, gp.has_cons, gp.min_cons, gp.max_cons):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.digest()
 
 
 def estimate_segments(gp: GraphPack, hw: HWTemplate,

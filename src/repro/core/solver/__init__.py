@@ -3,11 +3,13 @@ from .interlayer import (Chain, PruneStats, dp_prioritize,
                          dp_prioritize_scalar, enumerate_segments,
                          enumerate_segments_scalar, segment_pool)
 from .intralayer import Constraints, solve_intra_layer
-from .kapla import NetworkSchedule, solve
+from .kapla import (NetworkSchedule, rebatch_scheme, seed_chains_from,
+                    solve, solve_many, solve_topk, warm_layer_solver)
 
 __all__ = [
     "Chain", "Constraints", "NetworkSchedule", "PruneStats", "annealing",
     "dp_prioritize", "dp_prioritize_scalar", "enumerate_segments",
     "enumerate_segments_scalar", "exhaustive", "memo", "random_search",
-    "segment_pool", "solve", "solve_intra_layer",
+    "rebatch_scheme", "seed_chains_from", "segment_pool", "solve",
+    "solve_intra_layer", "solve_many", "solve_topk", "warm_layer_solver",
 ]

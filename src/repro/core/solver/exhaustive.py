@@ -288,9 +288,9 @@ def solve(graph: LayerGraph, hw: HWTemplate, budget_per_layer: int = 50000,
             for seg in seg_cands[start]:
                 if seg.stop != i:
                     continue
-                key = (seg.start, seg.stop, seg.alloc, seg.granule_frac)
+                key = seg.key
                 if key not in detail_cache:
-                    tot, schemes, costs = solve_segment(
+                    tot, schemes, costs, _pipe = solve_segment(
                         graph, hw, seg, consumers, layer_solver)
                     detail_cache[key] = None if tot is None else \
                         (tot.energy_pj, tot.latency_cycles, schemes, costs)

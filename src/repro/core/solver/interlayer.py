@@ -45,6 +45,13 @@ class SegmentScheme:
     def length(self) -> int:
         return self.stop - self.start
 
+    @property
+    def key(self) -> Tuple:
+        """Identity of the detail-solve this segment induces (estimates
+        excluded): the dedup key for segment caches within and across
+        chains (``kapla.solve`` / ``solve_many``)."""
+        return (self.start, self.stop, self.alloc, self.granule_frac)
+
 
 @dataclasses.dataclass
 class PruneStats:
@@ -485,6 +492,13 @@ def _pareto_prune(cands: List[SegmentScheme]) -> List[SegmentScheme]:
 class Chain:
     segments: Tuple[SegmentScheme, ...]
     est_cost: float
+
+    @property
+    def key(self) -> Tuple:
+        """Segmentation identity (per-segment keys): equal keys mean the
+        same detail solve — chain dedup across DP results and warm-start
+        seeds."""
+        return tuple(s.key for s in self.segments)
 
 
 def _seg_cost_fn(objective: str):

@@ -19,7 +19,7 @@ from .plan import GridAxis, KernelPlan, lower_scheme, lower_schedule
 from .exec import (execute_plan, make_inputs, measure_plan,
                    reference_output, verify_plan)
 from .netplan import (NetworkPlan, SegmentPlan, TensorPlacement,
-                      lower_network)
+                      lower_cached, lower_network)
 from .netexec import (compare_network, execute_network, make_network_inputs,
                       measure_network, network_runner, reference_network,
                       verify_network)
@@ -30,7 +30,8 @@ __all__ = [
     "GridAxis", "KernelPlan", "lower_scheme", "lower_schedule",
     "execute_plan", "make_inputs", "measure_plan", "reference_output",
     "verify_plan",
-    "NetworkPlan", "SegmentPlan", "TensorPlacement", "lower_network",
+    "NetworkPlan", "SegmentPlan", "TensorPlacement", "lower_cached",
+    "lower_network",
     "compare_network", "execute_network", "make_network_inputs",
     "measure_network", "network_runner", "reference_network",
     "verify_network",

@@ -218,3 +218,16 @@ def lower_network(schedule, graph: LayerGraph, hw: HWTemplate,
         plans=plans, segments=tuple(segs), placements=placements,
         predicted_latency_cycles=schedule.total_latency_cycles,
         predicted_energy_pj=schedule.total_energy_pj)
+
+
+def lower_cached(schedule, hw: HWTemplate,
+                 graph: Optional[LayerGraph] = None,
+                 repair: bool = True) -> NetworkPlan:
+    """Lower a schedule that came back from the schedule store
+    (``repro.service``): when no live ``graph`` is supplied, the layer
+    graph is rebuilt from the specs embedded in the schedule's schemes
+    (``NetworkSchedule.to_graph``) — cached schedules compile to
+    executable plans without re-running the solver or keeping the
+    original graph object around."""
+    graph = graph if graph is not None else schedule.to_graph()
+    return lower_network(schedule, graph, hw, repair=repair)

@@ -1,0 +1,177 @@
+"""Schedule-service CLI.
+
+    python -m repro.service solve    --net resnet --batch 64
+    python -m repro.service get      --net resnet --batch 64 [--json]
+    python -m repro.service stats
+    python -m repro.service warm     --net resnet --batch 32
+    python -m repro.service autotune --net mlp --batch 4 -k 3
+
+``solve`` answers through ``LocalClient`` (store hit -> warm near-miss ->
+cold solve) and reports the source + wall clock, so running it twice
+demonstrates the cached path.  ``warm`` forces a warm-start solve seeded
+from the nearest family record (same net, different batch).  ``autotune``
+lowers + executes the top-k candidates and promotes the measured winner.
+The store dir defaults to ``$REPRO_STORE_DIR`` or ``.repro_store``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Optional
+
+from ..core.solver.kapla import solve
+from ..hw.presets import eyeriss_multinode
+from ..workloads.nets import NETS, get_net
+from .autotune import autotune_network
+from .client import LocalClient, SolveRequest, warm_context
+from .store import DEFAULT_ROOT, ScheduleStore
+
+
+def _add_common(p: argparse.ArgumentParser, net: bool = True) -> None:
+    p.add_argument("--store-dir", default=DEFAULT_ROOT,
+                   help="schedule store root (default: %(default)s)")
+    if net:
+        p.add_argument("--net", required=True, choices=sorted(NETS),
+                       help="registered network")
+        p.add_argument("--batch", type=int, default=64)
+        p.add_argument("--training", action="store_true",
+                       help="use the training graph (fwd+bwd layers)")
+        p.add_argument("--objective", default="energy",
+                       choices=("energy", "edp", "latency"))
+        p.add_argument("--k-s", type=int, default=4, dest="k_s")
+        p.add_argument("--max-seg-len", type=int, default=4)
+
+
+def _request(args) -> SolveRequest:
+    graph = get_net(args.net, batch=args.batch, training=args.training)
+    hw = eyeriss_multinode()
+    return SolveRequest.make(graph, hw, objective=args.objective,
+                             k_s=args.k_s, max_seg_len=args.max_seg_len)
+
+
+def _print_result(res, hw_freq: float) -> None:
+    s = res.schedule
+    print(f"{s.graph_name}: source={res.source} "
+          f"sig={res.signature[:12]} in {res.seconds * 1e3:.1f} ms")
+    if s.valid:
+        print(f"  energy {s.total_energy_pj / 1e9:.2f} mJ | latency "
+              f"{s.total_latency_cycles / hw_freq * 1e3:.2f} ms "
+              f"({s.total_latency_cycles:.3e} cycles) | "
+              f"{0 if s.chain is None else len(s.chain.segments)} segments")
+    else:
+        print("  INVALID (no feasible schedule)")
+
+
+def cmd_solve(args) -> int:
+    store = ScheduleStore(args.store_dir)
+    client = LocalClient(store)
+    req = _request(args)
+    res = client.solve_request(req)
+    _print_result(res, req.hw.freq_hz)
+    print("  store:", json.dumps(store.stats()))
+    return 0 if res.schedule.valid else 1
+
+
+def cmd_get(args) -> int:
+    store = ScheduleStore(args.store_dir)
+    req = _request(args)
+    rec = store.get_record(req.signature())
+    if rec is None:
+        print(f"MISS {req.signature()[:12]} ({args.net}/b{args.batch})")
+        return 1
+    if args.json:
+        json.dump(rec.to_json(), sys.stdout, indent=1)
+        print()
+        return 0
+    print(f"HIT {rec.signature[:12]}: {rec.graph_name}/b{rec.batch} on "
+          f"{rec.hw_name}, energy {rec.predicted_energy_pj / 1e9:.2f} mJ, "
+          f"{rec.predicted_latency_cycles:.3e} cycles")
+    if rec.measured:
+        print(f"  measured: {json.dumps(rec.measured)}")
+    return 0
+
+
+def cmd_stats(args) -> int:
+    store = ScheduleStore(args.store_dir)
+    print(json.dumps(store.stats(), indent=1))
+    return 0
+
+
+def cmd_warm(args) -> int:
+    """Warm-start solve: seed from the nearest family record (same net,
+    different batch) and write the result for this batch's signature."""
+    store = ScheduleStore(args.store_dir)
+    req = _request(args)
+    sig = req.signature()
+    ctx = warm_context(store, req, sig)
+    seeds = solver = None
+    if ctx is not None:
+        seeds, solver, rec = ctx
+        print(f"seeding from {rec.graph_name}/b{rec.batch} "
+              f"({rec.signature[:12]})")
+    t0 = time.perf_counter()
+    sched = solve(req.graph, req.hw, seed_chains=seeds,
+                  use_dp=not seeds,
+                  **(dict(layer_solver=solver) if solver else {}),
+                  **req.opts)
+    dt = time.perf_counter() - t0
+    if not sched.valid:
+        print("warm solve produced no valid schedule")
+        return 1
+    store.put(sched, req.graph, req.hw, req.opts, sig=sig)
+    print(f"{'warm' if seeds else 'cold'} solve in {dt:.3f} s -> stored "
+          f"{sig[:12]}")
+    return 0
+
+
+def cmd_autotune(args) -> int:
+    store = ScheduleStore(args.store_dir)
+    req = _request(args)
+    report = autotune_network(req.graph, req.hw, store=store, k=args.k,
+                              iters=args.iters, **req.opts)
+    print(json.dumps(report, indent=1))
+    return 0 if report.get("n_executed") else 1
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.service",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="verb", required=True)
+
+    p = sub.add_parser("solve", help="serve one schedule "
+                       "(cache -> warm -> cold)")
+    _add_common(p)
+    p.set_defaults(fn=cmd_solve)
+
+    p = sub.add_parser("get", help="look up the stored record")
+    _add_common(p)
+    p.add_argument("--json", action="store_true",
+                   help="dump the full record JSON")
+    p.set_defaults(fn=cmd_get)
+
+    p = sub.add_parser("stats", help="store statistics")
+    _add_common(p, net=False)
+    p.set_defaults(fn=cmd_stats)
+
+    p = sub.add_parser("warm", help="warm-start solve from a family "
+                       "near-miss and store it")
+    _add_common(p)
+    p.set_defaults(fn=cmd_warm)
+
+    p = sub.add_parser("autotune", help="measure top-k candidates and "
+                       "promote the fastest")
+    _add_common(p)
+    p.add_argument("-k", type=int, default=3,
+                   help="candidate schedules to execute")
+    p.add_argument("--iters", type=int, default=2,
+                   help="timing iterations per candidate")
+    p.set_defaults(fn=cmd_autotune)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

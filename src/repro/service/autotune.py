@@ -1,0 +1,118 @@
+"""Measured top-k autotuning: re-rank the solver's best-k schedules by
+real (executed) runtime and promote the measured winner into the store.
+
+The analytical model picks an argmin; the autotuner checks it: the k best
+valid chains from ``kapla.solve_topk`` are each compiled to a
+``NetworkPlan`` (``lower_network``), executed end-to-end through the
+Pallas network executor (``netexec``), verified against the whole-graph
+reference pass, and timed.  The measured-fastest schedule is written to
+the store for the request's signature with its measured latency recorded
+alongside the predicted cost — subsequent ``solve`` hits serve the
+schedule that actually ran fastest, not merely the one predicted to.
+
+Rank agreement between predicted and measured latency across the
+candidates (Spearman) is the per-request trust signal, the service-tier
+counterpart of the calibration sweeps in ``repro.lower.calibrate``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from ..core.solver.kapla import solve_topk
+from ..hw.template import HWTemplate
+from ..workloads.layers import LayerGraph
+from .signature import schedule_signature, solver_options
+from .store import ScheduleStore
+
+
+def autotune_network(graph: LayerGraph, hw: HWTemplate,
+                     store: Optional[ScheduleStore] = None, k: int = 3,
+                     iters: int = 2, interpret: bool = True, seed: int = 0,
+                     max_workers: Optional[int] = None,
+                     tol: float = 1e-3, **options) -> Dict:
+    """Autotune one network; returns a JSON-safe report.  Candidates that
+    fail to lower or verify are skipped with reasons — the report's
+    ``candidates`` are the ones that really executed."""
+    # execution lives behind jax; keep the service core numpy-only
+    from ..lower.calibrate import spearman
+    from ..lower.netexec import (compare_network, make_network_inputs,
+                                 measure_network, network_runner)
+    from ..lower.netplan import lower_network
+
+    opts = solver_options(**options)
+    t0 = time.perf_counter()
+    cands = solve_topk(graph, hw, k=k, max_workers=max_workers, **opts)
+    entries: List[Dict] = []
+    skipped: List[Dict] = []
+    for rank, sched in enumerate(cands):
+        nplan = lower_network(sched, graph, hw)
+        bad = nplan.invalid_layers()
+        if bad:
+            skipped.append({"rank": rank, "reason": "; ".join(
+                f"{n}: {r}" for n, r in bad)})
+            continue
+        inputs = make_network_inputs(nplan, seed)
+        run = network_runner(nplan, inputs, interpret=interpret, jit=True)
+        ver = compare_network(nplan, run(), inputs, tol)
+        if not ver.ok:
+            skipped.append({"rank": rank,
+                            "reason": f"numerics {ver.max_rel_err:.2e} at "
+                                      f"{ver.worst_layer}"})
+            continue
+        measured = measure_network(nplan, iters=iters, warmup=0,
+                                   runner=run)
+        entries.append({
+            "rank": rank,
+            "n_segments": 0 if sched.chain is None
+            else len(sched.chain.segments),
+            "predicted_cycles": sched.total_latency_cycles,
+            "predicted_energy_pj": sched.total_energy_pj,
+            "max_rel_err": ver.max_rel_err,
+            "measured_seconds": measured,
+        })
+    report: Dict = {
+        "net": graph.name,
+        "hw": hw.name,
+        "options": opts,
+        "k_requested": k,
+        "n_candidates": len(cands),
+        "n_executed": len(entries),
+        "candidates": entries,
+        "skipped": skipped,
+        "autotune_seconds": time.perf_counter() - t0,
+    }
+    if not entries:
+        return report
+    preds = [e["predicted_cycles"] for e in entries]
+    if len(entries) >= 2 and len(set(preds)) > 1:
+        report["rank_agreement"] = spearman(
+            preds, [e["measured_seconds"] for e in entries])
+    elif len(entries) >= 2:
+        # all candidates predicted exactly equal: rank agreement is
+        # undefined, not zero
+        report["rank_agreement"] = None
+    best = min(entries, key=lambda e: e["measured_seconds"])
+    argmin = next((e for e in entries if e["rank"] == 0), None)
+    report["promoted_rank"] = best["rank"]
+    report["promoted_measured_seconds"] = best["measured_seconds"]
+    if argmin is not None:
+        report["argmin_measured_seconds"] = argmin["measured_seconds"]
+    sig = schedule_signature(graph, hw, opts)
+    report["signature"] = sig
+    if store is not None:
+        measured_meta = {
+            "measured_seconds": best["measured_seconds"],
+            "predicted_cycles": best["predicted_cycles"],
+            "rank": best["rank"],
+            "backend": "interpret" if interpret else "compiled",
+            "rank_agreement": report.get("rank_agreement"),
+            "n_candidates_executed": len(entries),
+        }
+        store.put(cands[best["rank"]], graph, hw, opts, sig=sig,
+                  measured=measured_meta)
+        report["promoted"] = True
+    return report
+
+
+__all__ = ["autotune_network"]

@@ -1,0 +1,201 @@
+"""Client-side types + the synchronous in-process client.
+
+``SolveRequest`` names one solve: a graph, a hardware template and the
+normalized solver options.  ``LocalClient`` serves requests directly —
+store lookup, warm-start near-miss, cold solve — without an event loop,
+sharing the exact answer path of the async ``SolveServer`` (both resolve
+cached → warm → cold in that order and write winners back to the store),
+so tests and scripts exercise the same semantics synchronously.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.solver.kapla import (NetworkSchedule, seed_chains_from, solve,
+                                 solve_many, warm_layer_solver)
+from ..hw.template import HWTemplate
+from ..workloads.layers import LayerGraph
+from .signature import family_signature, schedule_signature, solver_options
+from .store import ScheduleStore, StoreRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One schedule request; ``options`` are ``signature.solver_options``
+    overrides (k_s, max_seg_len, objective)."""
+
+    graph: LayerGraph
+    hw: HWTemplate
+    options: Tuple[Tuple[str, object], ...] = ()
+
+    @staticmethod
+    def make(graph: LayerGraph, hw: HWTemplate,
+             **options) -> "SolveRequest":
+        opts = solver_options(**options)
+        return SolveRequest(graph, hw, tuple(sorted(opts.items())))
+
+    @property
+    def opts(self) -> Dict:
+        return dict(self.options)
+
+    def signature(self) -> str:
+        return schedule_signature(self.graph, self.hw, self.opts)
+
+    def family(self) -> str:
+        return family_signature(self.graph, self.hw, self.opts)
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    """A served schedule plus provenance: ``source`` is ``"cached"`` (store
+    hit), ``"warm"`` (near-miss-seeded solve) or ``"cold"`` (full solve);
+    ``seconds`` is the service-side wall clock for this answer."""
+
+    schedule: NetworkSchedule
+    signature: str
+    source: str
+    seconds: float
+    record: Optional[StoreRecord] = None
+
+
+def warm_context(store: ScheduleStore, req: SolveRequest, sig: str):
+    """(seed chains, transferring layer solver, source record) from the
+    nearest family record in ``store``, or None.  The solver re-batches
+    the record's stored intra-layer schemes to this graph's batch
+    (positional name map — signatures never see names) so warm solves
+    *evaluate* instead of re-solving each layer.  The single warm-start
+    derivation shared by ``LocalClient``, ``SolveServer`` and the CLI."""
+    for rec in store.warm_records(req.family(), exclude=(sig,)):
+        sched = NetworkSchedule.from_json(rec.schedule)
+        seeds = seed_chains_from(sched, req.graph)
+        if not seeds:
+            continue
+        order = rec.layer_order or list(sched.layer_schemes)
+        stored = {l.name: sched.layer_schemes[old]
+                  for old, l in zip(order, req.graph.layers)
+                  if old in sched.layer_schemes}
+        return seeds, warm_layer_solver(stored), rec
+    return None
+
+
+class LocalClient:
+    """Synchronous in-process schedule client over one ``ScheduleStore``.
+
+    ``solve`` answers one request; ``solve_batch`` coalesces a list —
+    identical signatures are deduped and the distinct misses' segments are
+    pooled into one ThreadPoolExecutor pass (``kapla.solve_many``)."""
+
+    def __init__(self, store: Optional[ScheduleStore] = None,
+                 max_workers: Optional[int] = None,
+                 warm_start: bool = True):
+        self.store = store if store is not None else ScheduleStore()
+        self.max_workers = max_workers
+        self.warm_start = warm_start
+
+    # -- single request ------------------------------------------------------
+    def solve(self, graph: LayerGraph, hw: HWTemplate,
+              **options) -> ServiceResult:
+        req = SolveRequest.make(graph, hw, **options)
+        return self.solve_request(req)
+
+    def solve_request(self, req: SolveRequest) -> ServiceResult:
+        t0 = time.perf_counter()
+        sig = req.signature()
+        cached = self.store.get(sig, req.graph)
+        if cached is not None:
+            return ServiceResult(cached, sig, "cached",
+                                 time.perf_counter() - t0)
+        ctx = self._warm_context(req, sig)
+        if ctx is not None:
+            seeds, solver, _ = ctx
+            sched = solve(req.graph, req.hw, max_workers=self.max_workers,
+                          seed_chains=seeds, use_dp=False,
+                          layer_solver=solver, **req.opts)
+            if sched.valid:
+                rec = self.store.put(sched, req.graph, req.hw, req.opts,
+                                     sig=sig)
+                return ServiceResult(sched, sig, "warm",
+                                     time.perf_counter() - t0, rec)
+        sched = solve(req.graph, req.hw, max_workers=self.max_workers,
+                      **req.opts)
+        rec = None
+        if sched.valid:
+            rec = self.store.put(sched, req.graph, req.hw, req.opts,
+                                 sig=sig)
+        return ServiceResult(sched, sig, "cold",
+                             time.perf_counter() - t0, rec)
+
+    # -- batched requests ----------------------------------------------------
+    def solve_batch(self, reqs: Sequence[SolveRequest]
+                    ) -> List[ServiceResult]:
+        """Answer a batch: dedupe identical signatures, answer fresh ones
+        from the store, and solve the distinct misses *together* so their
+        segments share one thread pool (the server's coalescing path,
+        minus the event loop)."""
+        t0 = time.perf_counter()
+        sigs = [r.signature() for r in reqs]
+        results: Dict[str, ServiceResult] = {}
+        miss_sigs: List[str] = []
+        miss_reqs: List[SolveRequest] = []
+        miss_set: set = set()
+        for sig, req in zip(sigs, reqs):
+            if sig in results or sig in miss_set:
+                continue
+            cached = self.store.get(sig, req.graph)
+            if cached is not None:
+                results[sig] = ServiceResult(cached, sig, "cached",
+                                             time.perf_counter() - t0)
+            else:
+                miss_set.add(sig)
+                miss_sigs.append(sig)
+                miss_reqs.append(req)
+        if miss_reqs:
+            by_opts: Dict[Tuple, List[int]] = {}
+            for i, req in enumerate(miss_reqs):
+                by_opts.setdefault(req.options, []).append(i)
+            solved: Dict[int, NetworkSchedule] = {}
+            sources: Dict[int, str] = {}
+            for opt_key, idxs in by_opts.items():
+                group = [miss_reqs[i] for i in idxs]
+                ctxs = [self._warm_context(r, s)
+                        for r, s in zip(group,
+                                        (miss_sigs[i] for i in idxs))]
+                seeds = [c[0] if c else None for c in ctxs]
+                solvers = [c[1] if c else None for c in ctxs]
+                res = solve_many([(r.graph, r.hw) for r in group],
+                                 max_workers=self.max_workers,
+                                 seed_chains=seeds, layer_solvers=solvers,
+                                 **dict(opt_key))
+                for i, sched, seed in zip(idxs, res, seeds):
+                    if seed and not sched.valid:
+                        # a warm seed that does not transfer falls back
+                        # to a full cold solve
+                        sched = solve(miss_reqs[i].graph, miss_reqs[i].hw,
+                                      max_workers=self.max_workers,
+                                      **miss_reqs[i].opts)
+                        seed = None
+                    solved[i] = sched
+                    sources[i] = "warm" if seed else "cold"
+            for i, (sig, req) in enumerate(zip(miss_sigs, miss_reqs)):
+                sched = solved[i]
+                rec = None
+                if sched.valid:
+                    rec = self.store.put(sched, req.graph, req.hw,
+                                         req.opts, sig=sig)
+                results[sig] = ServiceResult(
+                    sched, sig, sources[i], time.perf_counter() - t0, rec)
+        return [results[sig] for sig in sigs]
+
+    # -- helpers -------------------------------------------------------------
+    def _warm_context(self, req: SolveRequest, sig: str):
+        if not self.warm_start:
+            return None
+        return warm_context(self.store, req, sig)
+
+    def stats(self) -> Dict:
+        return self.store.stats()
+
+
+__all__ = ["SolveRequest", "ServiceResult", "LocalClient", "warm_context"]

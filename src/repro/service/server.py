@@ -1,0 +1,206 @@
+"""Async batched solve server.
+
+Clients ``submit`` ``SolveRequest``s; a single coalescing loop
+(``serve_forever``) drains the queue in windows and answers each batch:
+
+  1. identical in-flight signatures are **deduped** — the second submit of
+     a signature awaits the first's future, never enqueues a second solve;
+  2. fresh signatures are answered **from the store**;
+  3. the remaining misses are solved **together**: each request's DP runs
+     (vectorized, cheap), then the distinct detail-solve segments of all
+     requests in the batch are pooled into one ThreadPoolExecutor pass
+     (``kapla.solve_many``), run off the event loop in an executor so the
+     loop keeps accepting submissions;
+  4. winners are written back to the store; family near-misses seed
+     warm-start chains exactly like ``LocalClient``.
+
+The server is in-process (asyncio futures, no sockets): the unit the CLI
+and tests drive, and the piece a transport layer would wrap.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Dict, List, Optional, Tuple
+
+from ..core.solver.kapla import solve_many
+from .client import ServiceResult, SolveRequest, warm_context
+from .store import ScheduleStore
+
+_STOP = object()
+
+
+class SolveServer:
+    """Coalescing schedule server over one ``ScheduleStore``."""
+
+    def __init__(self, store: Optional[ScheduleStore] = None,
+                 max_workers: Optional[int] = None,
+                 batch_window_s: float = 0.005,
+                 warm_start: bool = True):
+        self.store = store if store is not None else ScheduleStore()
+        self.max_workers = max_workers
+        self.batch_window_s = batch_window_s
+        self.warm_start = warm_start
+        self._queue: Optional[asyncio.Queue] = None
+        self._queue_loop = None
+        self._stopped_loop = None
+        self._inflight: Dict[str, asyncio.Future] = {}
+        self.requests = 0
+        self.coalesced = 0
+        self.batches = 0
+        self.solved = 0
+
+    def _q(self) -> asyncio.Queue:
+        # asyncio.Queue binds to the loop it is first awaited on; a server
+        # reused across asyncio.run() calls (tests, CLI) needs a fresh
+        # queue — and fresh in-flight futures — per event loop
+        loop = asyncio.get_running_loop()
+        if self._queue is None or self._queue_loop is not loop:
+            self._queue = asyncio.Queue()
+            self._queue_loop = loop
+            self._inflight = {}
+        return self._queue
+
+    # -- client side ---------------------------------------------------------
+    async def submit(self, req: SolveRequest) -> ServiceResult:
+        """Enqueue one request and await its result.  Duplicate in-flight
+        signatures share one future (and one solve).  Raises if the
+        server's loop on this event loop has already stopped — the
+        request would otherwise never be drained."""
+        self.requests += 1
+        q = self._q()              # also rebinds in-flight map on new loops
+        if self._stopped_loop is asyncio.get_running_loop():
+            raise RuntimeError("SolveServer is stopped on this event loop")
+        sig = req.signature()
+        fut = self._inflight.get(sig)
+        if fut is not None:
+            self.coalesced += 1
+            return await asyncio.shield(fut)
+        fut = asyncio.get_running_loop().create_future()
+        self._inflight[sig] = fut
+        await q.put((sig, req, fut))
+        try:
+            return await asyncio.shield(fut)
+        finally:
+            if self._inflight.get(sig) is fut and fut.done():
+                self._inflight.pop(sig, None)
+
+    async def stop(self) -> None:
+        await self._q().put(_STOP)
+
+    # -- server side ---------------------------------------------------------
+    async def serve_forever(self) -> None:
+        """Drain-and-batch loop; returns after ``stop()``."""
+        q = self._q()
+        self._stopped_loop = None
+        running = True
+        while running:
+            item = await q.get()
+            if item is _STOP:
+                break
+            batch = [item]
+            if self.batch_window_s > 0:
+                await asyncio.sleep(self.batch_window_s)  # coalesce window
+            while not q.empty():
+                nxt = q.get_nowait()
+                if nxt is _STOP:
+                    running = False
+                    break
+                batch.append(nxt)
+            await self._process(batch)
+        # fail anything still queued after stop; later submits on this
+        # loop raise instead of enqueueing into a drained queue
+        self._stopped_loop = asyncio.get_running_loop()
+        while not q.empty():
+            item = q.get_nowait()
+            if item is not _STOP:
+                _, _, fut = item
+                if not fut.done():
+                    fut.set_exception(RuntimeError("server stopped"))
+
+    async def _process(self, batch: List[Tuple]) -> None:
+        self.batches += 1
+        t0 = time.perf_counter()
+        loop = asyncio.get_running_loop()
+        misses: List[Tuple[str, SolveRequest, asyncio.Future]] = []
+        for sig, req, fut in batch:
+            if fut.done():
+                continue
+            # store reads parse whole schedule records: keep the disk +
+            # JSON work off the event loop, like the solves below
+            cached = await loop.run_in_executor(None, self.store.get,
+                                                sig, req.graph)
+            if cached is not None:
+                fut.set_result(ServiceResult(
+                    cached, sig, "cached", time.perf_counter() - t0))
+            else:
+                misses.append((sig, req, fut))
+        if not misses:
+            return
+        by_opts: Dict[Tuple, List[Tuple[str, SolveRequest,
+                                        asyncio.Future]]] = {}
+        for m in misses:
+            by_opts.setdefault(m[1].options, []).append(m)
+        for opt_key, group in by_opts.items():
+            ctxs = [await loop.run_in_executor(
+                None, warm_context, self.store, req, sig)
+                if self.warm_start else None for sig, req, _ in group]
+            seeds = [c[0] if c else None for c in ctxs]
+            solvers = [c[1] if c else None for c in ctxs]
+            sources = ["warm" if s else "cold" for s in seeds]
+            items = [(req.graph, req.hw) for _, req, _ in group]
+            try:
+                schedules = await loop.run_in_executor(
+                    None, lambda: solve_many(
+                        items, max_workers=self.max_workers,
+                        seed_chains=seeds, layer_solvers=solvers,
+                        **dict(opt_key)))
+            except Exception as e:                # pragma: no cover
+                for _, _, fut in group:
+                    if not fut.done():
+                        fut.set_exception(e)
+                continue
+            for (sig, req, fut), sched, src in zip(group, schedules,
+                                                   sources):
+                self.solved += 1
+                if src == "warm" and not sched.valid:
+                    # seed did not transfer: fall back to a cold solve
+                    sched = await loop.run_in_executor(
+                        None, lambda: solve_many(
+                            [(req.graph, req.hw)],
+                            max_workers=self.max_workers,
+                            **dict(opt_key))[0])
+                    src = "cold"
+                rec = None
+                if sched.valid:
+                    # record serialization + the eviction scan stay off
+                    # the loop too
+                    rec = await loop.run_in_executor(
+                        None, lambda s=sched, r=req, g=sig:
+                        self.store.put(s, r.graph, r.hw, r.opts, sig=g))
+                if not fut.done():
+                    fut.set_result(ServiceResult(
+                        sched, sig, src, time.perf_counter() - t0, rec))
+                self._inflight.pop(sig, None)
+
+    def stats(self) -> Dict:
+        return {**self.store.stats(), "requests": self.requests,
+                "coalesced": self.coalesced, "batches": self.batches,
+                "solved": self.solved,
+                "inflight": len(self._inflight)}
+
+
+async def serve_batch(server: SolveServer,
+                      reqs: List[SolveRequest]) -> List[ServiceResult]:
+    """Convenience: run the server loop just long enough to answer one
+    burst of concurrent requests (tests, CLI)."""
+    loop_task = asyncio.ensure_future(server.serve_forever())
+    try:
+        results = await asyncio.gather(*(server.submit(r) for r in reqs))
+    finally:
+        await server.stop()
+        await loop_task
+    return list(results)
+
+
+__all__ = ["SolveServer", "serve_batch"]

@@ -1,0 +1,280 @@
+"""Persistent, content-addressed schedule store.
+
+On-disk layout (sqlite-free, human-inspectable) under one store dir:
+
+    <root>/
+      records/<signature>.json      one versioned record per solve
+      index.jsonl                   append-only put log (sig, family,
+                                    graph, batch, timestamp)
+
+Records wrap ``NetworkSchedule.to_json`` with the signature, the family
+signature, the normalized solver options, hardware name and the layer
+order, plus an optional ``measured`` block the autotuner fills in when it
+promotes a measured-fastest schedule.  All writes are atomic (temp file +
+``os.replace``; index appends are single short lines), so a killed writer
+never leaves a torn record.
+
+Reads are content-addressed: ``get(signature)`` either misses or returns
+a schedule that re-scores bit-identically to the original solve
+(parity-tested).  A graph whose layer *names* differ from the stored ones
+(same signature — signatures never see names) is re-bound positionally.
+``warm_records(family)`` returns near-misses — same graph family,
+different batch — whose chains can seed a warm-start solve
+(``kapla.seed_chains_from``).
+
+Eviction is LRU over record-file mtimes (hits refresh the mtime), bounded
+by ``max_entries``; hit/miss/eviction counts are exposed via ``stats()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List, Mapping, Optional, Sequence
+
+from ..core.solver.kapla import NetworkSchedule
+from ..hw.template import HWTemplate
+from ..workloads.layers import LayerGraph
+from .signature import family_signature, schedule_signature, solver_options
+
+STORE_VERSION = 1
+#: default store dir (overridable per-store or via REPRO_STORE_DIR)
+DEFAULT_ROOT = os.environ.get("REPRO_STORE_DIR", ".repro_store")
+
+
+@dataclasses.dataclass
+class StoreRecord:
+    """One versioned store entry (the JSON record, typed)."""
+
+    signature: str
+    family: str
+    graph_name: str
+    batch: int
+    options: Dict
+    hw_name: str
+    created: float
+    predicted_energy_pj: float
+    predicted_latency_cycles: float
+    layer_order: List[str]
+    schedule: Dict                      # NetworkSchedule.to_json()
+    measured: Optional[Dict] = None     # autotune promotion metadata
+    version: int = STORE_VERSION
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Mapping) -> "StoreRecord":
+        known = {f.name for f in dataclasses.fields(StoreRecord)}
+        return StoreRecord(**{k: v for k, v in d.items() if k in known})
+
+
+def _graph_batch(graph: LayerGraph) -> int:
+    return graph.layers[0].dim("N") if graph.layers else 1
+
+
+def _atomic_write(path: str, text: str) -> None:
+    d = os.path.dirname(path)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+class ScheduleStore:
+    """Content-addressed schedule store rooted at ``root`` (created on
+    first use).  Thread-compatible for the in-process server: all state
+    lives on disk; counters are advisory."""
+
+    def __init__(self, root: str = DEFAULT_ROOT, max_entries: int = 512):
+        self.root = root
+        self.records_dir = os.path.join(root, "records")
+        self.index_path = os.path.join(root, "index.jsonl")
+        os.makedirs(self.records_dir, exist_ok=True)
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.warm_hits = 0
+        # family -> [signatures], replayed from the index, filtered to
+        # records that still exist (evicted entries drop out naturally)
+        self._family: Dict[str, List[str]] = {}
+        self._replay_index()
+
+    # -- signatures (convenience passthroughs) -------------------------------
+    def signature(self, graph: LayerGraph, hw: HWTemplate,
+                  options: Optional[Mapping] = None) -> str:
+        return schedule_signature(graph, hw, options)
+
+    def family(self, graph: LayerGraph, hw: HWTemplate,
+               options: Optional[Mapping] = None) -> str:
+        return family_signature(graph, hw, options)
+
+    # -- paths / existence ---------------------------------------------------
+    def _rec_path(self, sig: str) -> str:
+        return os.path.join(self.records_dir, f"{sig}.json")
+
+    def has(self, sig: str) -> bool:
+        return os.path.exists(self._rec_path(sig))
+
+    def __len__(self) -> int:
+        return sum(1 for n in os.listdir(self.records_dir)
+                   if n.endswith(".json"))
+
+    def signatures(self) -> List[str]:
+        return sorted(n[:-5] for n in os.listdir(self.records_dir)
+                      if n.endswith(".json"))
+
+    # -- index ---------------------------------------------------------------
+    def _replay_index(self) -> None:
+        if not os.path.exists(self.index_path):
+            return
+        with open(self.index_path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    e = json.loads(line)
+                except ValueError:
+                    continue                    # torn tail line: skip
+                if self.has(e.get("sig", "")):
+                    fam = self._family.setdefault(e.get("family", ""), [])
+                    if e["sig"] not in fam:
+                        fam.append(e["sig"])
+
+    def _index_append(self, entry: Dict) -> None:
+        with open(self.index_path, "a") as f:
+            f.write(json.dumps(entry) + "\n")
+
+    # -- core API ------------------------------------------------------------
+    def get_record(self, sig: str) -> Optional[StoreRecord]:
+        path = self._rec_path(sig)
+        try:
+            with open(path) as f:
+                rec = StoreRecord.from_json(json.load(f))
+        except (OSError, ValueError, TypeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        now = time.time()
+        os.utime(path, (now, now))              # LRU touch
+        return rec
+
+    def get(self, sig: str, graph: Optional[LayerGraph] = None
+            ) -> Optional[NetworkSchedule]:
+        """The stored schedule for ``sig``, re-bound to ``graph`` when
+        given (positionally if the graph's layer names differ from the
+        stored ones — signatures are name-insensitive)."""
+        rec = self.get_record(sig)
+        if rec is None:
+            return None
+        return self._bind(rec, graph)
+
+    def _bind(self, rec: StoreRecord, graph: Optional[LayerGraph]
+              ) -> NetworkSchedule:
+        sj = rec.schedule
+        if graph is None:
+            return NetworkSchedule.from_json(sj)
+        names = list(sj["layer_schemes"].keys())
+        if all(n in graph.by_name for n in names):
+            return NetworkSchedule.from_json(sj, graph)
+        if len(names) != len(graph.layers):
+            raise ValueError(
+                f"record {rec.signature[:12]} has {len(names)} layers, "
+                f"graph {graph.name!r} has {len(graph.layers)}")
+        # positional re-bind: stored order is the solve's topological
+        # order, which the signature guarantees matches the graph's
+        order = rec.layer_order or names
+        mapping = {old: l.name for old, l in zip(order, graph.layers)}
+        sj = dict(sj)
+        sj["graph_name"] = graph.name
+        sj["layer_schemes"] = {mapping[n]: v
+                               for n, v in sj["layer_schemes"].items()}
+        sj["layer_costs"] = {mapping[n]: v
+                             for n, v in sj.get("layer_costs", {}).items()}
+        return NetworkSchedule.from_json(sj, graph)
+
+    def put(self, schedule: NetworkSchedule, graph: LayerGraph,
+            hw: HWTemplate, options: Optional[Mapping] = None,
+            sig: Optional[str] = None, family: Optional[str] = None,
+            measured: Optional[Dict] = None) -> StoreRecord:
+        """Insert (or overwrite) the record for one solved schedule;
+        returns the written record.  Invalid schedules are refused."""
+        if not schedule.valid:
+            raise ValueError("refusing to store an invalid schedule")
+        opts = solver_options(**dict(options or {}))
+        sig = sig if sig is not None else self.signature(graph, hw, opts)
+        family = family if family is not None \
+            else self.family(graph, hw, opts)
+        rec = StoreRecord(
+            signature=sig, family=family, graph_name=graph.name,
+            batch=_graph_batch(graph), options=opts, hw_name=hw.name,
+            created=time.time(),
+            predicted_energy_pj=schedule.total_energy_pj,
+            predicted_latency_cycles=schedule.total_latency_cycles,
+            layer_order=[l.name for l in graph.layers],
+            schedule=schedule.to_json(), measured=measured)
+        _atomic_write(self._rec_path(sig), json.dumps(rec.to_json(),
+                                                      indent=1))
+        self._index_append({"sig": sig, "family": family,
+                            "graph": graph.name, "batch": rec.batch,
+                            "t": rec.created})
+        fam = self._family.setdefault(family, [])
+        if sig not in fam:
+            fam.append(sig)
+        self._evict_to_capacity()
+        return rec
+
+    # -- warm-start near-misses ----------------------------------------------
+    def warm_records(self, family: str, exclude: Sequence[str] = ()
+                     ) -> List[StoreRecord]:
+        """Records in the same graph family (same layers/hardware/options,
+        different batch), newest first — warm-start seeds."""
+        out: List[StoreRecord] = []
+        for sig in reversed(self._family.get(family, [])):
+            if sig in exclude or not self.has(sig):
+                continue
+            try:
+                with open(self._rec_path(sig)) as f:
+                    out.append(StoreRecord.from_json(json.load(f)))
+            except (OSError, ValueError, TypeError):
+                continue
+        if out:
+            self.warm_hits += 1
+        return out
+
+    # -- eviction ------------------------------------------------------------
+    def _evict_to_capacity(self) -> None:
+        names = [n for n in os.listdir(self.records_dir)
+                 if n.endswith(".json")]
+        if len(names) <= self.max_entries:
+            return
+        paths = [os.path.join(self.records_dir, n) for n in names]
+        paths.sort(key=lambda p: os.path.getmtime(p))   # oldest first
+        for p in paths[:len(paths) - self.max_entries]:
+            try:
+                os.unlink(p)
+                self.evictions += 1
+            except OSError:
+                pass
+        # drop evicted sigs from the family map
+        for fam, sigs in self._family.items():
+            self._family[fam] = [s for s in sigs if self.has(s)]
+
+    # -- stats ---------------------------------------------------------------
+    def stats(self) -> Dict:
+        return {"root": self.root, "entries": len(self),
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "warm_hits": self.warm_hits,
+                "families": sum(1 for v in self._family.values() if v)}
+
+
+__all__ = ["ScheduleStore", "StoreRecord", "STORE_VERSION", "DEFAULT_ROOT"]

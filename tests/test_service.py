@@ -1,0 +1,325 @@
+"""Schedule-service tests: signatures, the content-addressed store,
+warm-start seeding, the coalescing server, top-k + autotune, and the
+store-read round-trip/re-scoring parity gates."""
+import asyncio
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core.solver import (NetworkSchedule, memo, seed_chains_from,
+                               solve, solve_many, solve_topk)
+from repro.hw.presets import eyeriss_multinode
+from repro.service import (LocalClient, ScheduleStore, SolveRequest,
+                           SolveServer, family_signature,
+                           schedule_signature, serve_batch, solver_options)
+from repro.workloads.layers import LayerGraph, fc
+from repro.workloads.nets import get_net
+
+HW = eyeriss_multinode()
+
+
+def _branchy(name="twin", batch=8, flip=False):
+    """Two independent input layers joined by one consumer; ``flip``
+    permutes the (topologically legal) insertion order of the inputs."""
+    a = fc("a", batch, 256, 128)
+    b = fc("b", batch, 512, 128)
+    first, second = (b, a) if flip else (a, b)
+    join = fc("join", batch, 128, 64, src=[first.name])
+    return LayerGraph(name, [first, second, join])
+
+
+# ---------------------------------------------------------------------------
+# signatures
+# ---------------------------------------------------------------------------
+
+def test_signature_stable_across_processually_identical_graphs():
+    s1 = schedule_signature(get_net("mlp", batch=8), HW)
+    s2 = schedule_signature(get_net("mlp", batch=8), HW)
+    assert s1 == s2
+
+
+def test_signature_insensitive_to_layer_names():
+    g1 = get_net("mlp", batch=8)
+    renamed = [dataclasses.replace(
+        l, name=f"L{i}", src=tuple(f"L{j}" for j in range(i)
+                                   if g1.layers[j].name in l.src))
+        for i, l in enumerate(g1.layers)]
+    g2 = LayerGraph("mlp", renamed)
+    assert schedule_signature(g1, HW) == schedule_signature(g2, HW)
+    assert family_signature(g1, HW) == family_signature(g2, HW)
+
+
+def test_signature_sensitive_to_insertion_order():
+    # the DP walks the topological list, so order is solver-visible
+    assert schedule_signature(_branchy(), HW) != \
+        schedule_signature(_branchy(flip=True), HW)
+
+
+def test_signature_sensitive_to_batch_but_family_is_not():
+    g8, g16 = get_net("mlp", batch=8), get_net("mlp", batch=16)
+    assert schedule_signature(g8, HW) != schedule_signature(g16, HW)
+    assert family_signature(g8, HW) == family_signature(g16, HW)
+
+
+def test_signature_sensitive_to_hw_and_options():
+    g = get_net("mlp", batch=8)
+    assert schedule_signature(g, HW) != \
+        schedule_signature(g, HW.with_(mac_energy_pj=HW.mac_energy_pj * 2))
+    assert schedule_signature(g, HW) != \
+        schedule_signature(g, HW, {"objective": "latency"})
+    with pytest.raises(ValueError):
+        solver_options(bogus=1)
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+
+def test_store_put_get_roundtrip(tmp_path):
+    store = ScheduleStore(str(tmp_path))
+    net = get_net("mlp", batch=8)
+    sched = solve(net, HW)
+    rec = store.put(sched, net, HW)
+    assert store.has(rec.signature) and len(store) == 1
+    back = store.get(rec.signature, get_net("mlp", batch=8))
+    assert back is not None
+    assert back.total_energy_pj == sched.total_energy_pj
+    assert back.total_latency_cycles == sched.total_latency_cycles
+    assert store.stats()["hits"] == 1
+    assert store.get("0" * 64) is None
+    assert store.stats()["misses"] == 1
+
+
+def test_store_loaded_schedule_rescores_bit_identically(tmp_path):
+    # the satellite parity gate: store read -> rescore == original solve
+    store = ScheduleStore(str(tmp_path))
+    for name, batch in (("mlp", 8), ("lstm", 8), ("alexnet", 4)):
+        net = get_net(name, batch=batch)
+        sched = solve(net, HW)
+        sig = store.put(sched, net, HW).signature
+        loaded = store.get(sig, get_net(name, batch=batch))
+        e, lat, costs = loaded.rescore(get_net(name, batch=batch), HW)
+        assert e == sched.total_energy_pj
+        assert lat == sched.total_latency_cycles
+        for n, c in sched.layer_costs.items():
+            assert costs[n].energy_pj == c.energy_pj
+            assert costs[n].latency_cycles == c.latency_cycles
+
+
+def test_from_json_roundtrip_without_live_graph():
+    net = get_net("mlp", batch=8)
+    sched = solve(net, HW)
+    blob = json.dumps(sched.to_json())
+    back = NetworkSchedule.from_json(json.loads(blob))     # no graph
+    # embedded specs rebuild the graph; rescoring needs no original object
+    g = back.to_graph()
+    assert [l.name for l in g.layers] == [l.name for l in net.layers]
+    e, lat, _ = back.rescore(hw=HW)
+    assert e == sched.total_energy_pj
+    assert lat == sched.total_latency_cycles
+    # chain metadata (est_cost + pipelined flags) survives the round-trip
+    assert back.chain.est_cost == sched.chain.est_cost
+    assert back.seg_pipelined == sched.seg_pipelined
+    assert json.dumps(back.to_json()) == blob
+
+
+def test_store_positional_rebind_for_renamed_layers(tmp_path):
+    store = ScheduleStore(str(tmp_path))
+    g1 = get_net("mlp", batch=8)
+    sig = store.put(solve(g1, HW), g1, HW).signature
+    renamed = [dataclasses.replace(
+        l, name=f"L{i}", src=(f"L{i - 1}",) if i else ())
+        for i, l in enumerate(g1.layers)]
+    g2 = LayerGraph("mlp-renamed", renamed)
+    assert schedule_signature(g2, HW) == sig       # names never enter
+    back = store.get(sig, g2)
+    assert set(back.layer_schemes) == {l.name for l in g2.layers}
+    for l in g2.layers:
+        assert back.layer_schemes[l.name].layer is l
+
+
+def test_store_eviction_and_stats(tmp_path):
+    store = ScheduleStore(str(tmp_path), max_entries=2)
+    for batch in (2, 4, 8):
+        net = get_net("mlp", batch=batch)
+        store.put(solve(net, HW), net, HW)
+    assert len(store) == 2
+    assert store.stats()["evictions"] == 1
+    # the family map drops evicted signatures too
+    fam = family_signature(get_net("mlp", batch=2), HW)
+    assert all(store.has(s) for s in store._family[fam])
+
+
+def test_store_atomic_record_files(tmp_path):
+    store = ScheduleStore(str(tmp_path))
+    net = get_net("mlp", batch=4)
+    store.put(solve(net, HW), net, HW)
+    assert not [n for n in os.listdir(store.records_dir)
+                if n.endswith(".tmp")]
+    # a second store over the same dir replays the index
+    store2 = ScheduleStore(str(tmp_path))
+    fam = family_signature(net, HW)
+    assert store2.warm_records(fam)
+
+
+# ---------------------------------------------------------------------------
+# warm-start seeding
+# ---------------------------------------------------------------------------
+
+def test_seed_chains_from_rebatches_granules():
+    net8 = get_net("lstm", batch=8)
+    sched = solve(net8, HW)
+    net32 = get_net("lstm", batch=32)
+    seeds = seed_chains_from(sched, net32)
+    assert len(seeds) == 1
+    segs = seeds[0].segments
+    assert [(s.start, s.stop) for s in segs] == \
+        [(s.start, s.stop) for s in sched.chain.segments]
+    for s in segs:
+        assert s.granule_frac == 1.0 or s.granule_frac == pytest.approx(
+            1.0 / net32.layers[s.start].dim("N"))
+    warm = solve(net32, HW, seed_chains=seeds, use_dp=False)
+    assert warm.valid
+
+
+def test_client_cold_cached_warm(tmp_path):
+    client = LocalClient(ScheduleStore(str(tmp_path)))
+    r1 = client.solve(get_net("mlp", batch=8), HW)
+    assert r1.source == "cold" and r1.schedule.valid
+    r2 = client.solve(get_net("mlp", batch=8), HW)
+    assert r2.source == "cached"
+    assert r2.schedule.total_energy_pj == r1.schedule.total_energy_pj
+    r3 = client.solve(get_net("mlp", batch=16), HW)
+    assert r3.source == "warm" and r3.schedule.valid
+    st = client.stats()
+    assert st["entries"] == 2 and st["warm_hits"] >= 1
+
+
+def test_client_batch_dedupes_and_pools(tmp_path):
+    client = LocalClient(ScheduleStore(str(tmp_path)))
+    reqs = [SolveRequest.make(get_net("mlp", batch=8), HW),
+            SolveRequest.make(get_net("mlp", batch=8), HW),
+            SolveRequest.make(get_net("lstm", batch=8), HW)]
+    res = client.solve_batch(reqs)
+    assert [r.source for r in res] == ["cold", "cold", "cold"]
+    assert res[0].signature == res[1].signature
+    assert res[0].schedule.total_energy_pj == \
+        res[1].schedule.total_energy_pj
+    # identical results to independent solves
+    assert res[2].schedule.total_energy_pj == \
+        solve(get_net("lstm", batch=8), HW).total_energy_pj
+    res2 = client.solve_batch(reqs)
+    assert [r.source for r in res2] == ["cached"] * 3
+
+
+def test_solve_many_matches_individual_solves():
+    items = [(get_net("mlp", batch=8), HW), (get_net("lstm", batch=8), HW)]
+    batched = solve_many(items)
+    for (g, hw), sched in zip(items, batched):
+        ref = solve(g, hw)
+        assert sched.total_energy_pj == ref.total_energy_pj
+        assert sched.total_latency_cycles == ref.total_latency_cycles
+
+
+# ---------------------------------------------------------------------------
+# async server
+# ---------------------------------------------------------------------------
+
+def test_server_coalesces_and_caches(tmp_path):
+    server = SolveServer(ScheduleStore(str(tmp_path)))
+    reqs = [SolveRequest.make(get_net("mlp", batch=8), HW),
+            SolveRequest.make(get_net("mlp", batch=8), HW),
+            SolveRequest.make(get_net("mlp", batch=16), HW)]
+    res = asyncio.run(serve_batch(server, reqs))
+    assert all(r.schedule.valid for r in res)
+    assert res[0].schedule.total_energy_pj == \
+        res[1].schedule.total_energy_pj
+    st = server.stats()
+    assert st["requests"] == 3 and st["coalesced"] >= 1
+    assert st["solved"] <= 2            # the duplicate never solved twice
+    res2 = asyncio.run(serve_batch(server, reqs))
+    assert [r.source for r in res2] == ["cached"] * 3
+
+
+def test_server_submit_after_stop_raises(tmp_path):
+    server = SolveServer(ScheduleStore(str(tmp_path)))
+    req = SolveRequest.make(get_net("mlp", batch=8), HW)
+
+    async def run():
+        task = asyncio.ensure_future(server.serve_forever())
+        await server.stop()
+        await task
+        with pytest.raises(RuntimeError):
+            await server.submit(req)
+    asyncio.run(run())
+
+
+# ---------------------------------------------------------------------------
+# top-k + autotune
+# ---------------------------------------------------------------------------
+
+def test_solve_topk_ordering_and_argmin_parity():
+    net = get_net("lstm", batch=8)
+    cands = solve_topk(net, HW, k=3)
+    assert 1 <= len(cands) <= 3
+    ref = solve(get_net("lstm", batch=8), HW)
+    assert cands[0].total_energy_pj == ref.total_energy_pj
+    energies = [c.total_energy_pj for c in cands]
+    assert energies == sorted(energies)
+    # distinct chains, all valid, all rescorable
+    keys = {tuple((s.start, s.stop, s.alloc, s.granule_frac)
+                  for s in c.chain.segments) for c in cands}
+    assert len(keys) == len(cands)
+    for c in cands:
+        e, lat, _ = c.rescore(get_net("lstm", batch=8), HW)
+        assert e == c.total_energy_pj and lat == c.total_latency_cycles
+
+
+def test_autotune_executes_and_promotes(tmp_path):
+    from repro.lower.calibrate import default_hw
+    from repro.service import autotune_network
+    store = ScheduleStore(str(tmp_path))
+    hw = default_hw()
+    net = get_net("mlp", batch=2)
+    report = autotune_network(net, hw, store=store, k=2, iters=1)
+    assert report["n_executed"] >= 1
+    best = min(e["measured_seconds"] for e in report["candidates"])
+    assert report["promoted_measured_seconds"] == best
+    if any(e["rank"] == 0 for e in report["candidates"]):
+        assert report["promoted_measured_seconds"] <= \
+            report["argmin_measured_seconds"]
+    rec = store.get_record(report["signature"])
+    assert rec is not None and rec.measured is not None
+    assert rec.measured["measured_seconds"] == best
+    # the promoted schedule still lowers straight from the store
+    from repro.lower import lower_cached
+    nplan = lower_cached(store.get(report["signature"]), hw)
+    assert nplan.executable
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_solve_get_stats(tmp_path, capsys):
+    from repro.service.__main__ import main
+    root = str(tmp_path / "store")
+    assert main(["solve", "--net", "mlp", "--batch", "8",
+                 "--store-dir", root]) == 0
+    out1 = capsys.readouterr().out
+    assert "source=cold" in out1
+    assert main(["solve", "--net", "mlp", "--batch", "8",
+                 "--store-dir", root]) == 0
+    assert "source=cached" in capsys.readouterr().out
+    assert main(["warm", "--net", "mlp", "--batch", "16",
+                 "--store-dir", root]) == 0
+    assert "seeding from mlp/b8" in capsys.readouterr().out
+    assert main(["get", "--net", "mlp", "--batch", "8",
+                 "--store-dir", root]) == 0
+    assert "HIT" in capsys.readouterr().out
+    assert main(["stats", "--store-dir", root]) == 0
+    assert json.loads(capsys.readouterr().out)["entries"] == 2
+    assert main(["get", "--net", "mlp", "--batch", "4",
+                 "--store-dir", root]) == 1
