@@ -6,7 +6,10 @@ lowering sweeps (per-kernel and whole-network), written to
 ``BENCH_calibration.json`` / ``BENCH_network.json``; ``--service`` adds
 the schedule-service sweep (cold vs warm vs cached solve latency through
 the store, plus measured top-k autotuning), written to
-``BENCH_service.json``.
+``BENCH_service.json``; ``--chaos`` adds the resilience sweep (request
+availability + latency percentiles through the SolveServer under a
+seeded ~20% store-fault + slow-solve schedule), written to
+``BENCH_robustness.json``.
 
     python benchmarks/bench_solver_speed.py [--quick] [--out perf.json]
 
@@ -293,6 +296,108 @@ def bench_service(quick: bool) -> dict:
         shutil.rmtree(root, ignore_errors=True)
 
 
+def _pct(vals, q: float):
+    if not vals:
+        return None
+    vals = sorted(vals)
+    return vals[min(len(vals) - 1, int(round(q * (len(vals) - 1))))]
+
+
+def bench_chaos(quick: bool) -> dict:
+    """Resilience under a seeded fault schedule (the acceptance workload):
+    a burst of requests through the async ``SolveServer`` while ~20% of
+    store reads/writes raise, a fraction of segment solves run slow, and
+    one request carries an already-expired deadline.  Availability is the
+    fraction of requests answered with a ``ServiceResult`` or the typed
+    ``ServiceError`` (anything else — a hang or an untyped crash — counts
+    against it); latency percentiles are measured from submission.  Full
+    record -> BENCH_robustness.json."""
+    import asyncio
+    import dataclasses
+    import shutil
+    import tempfile
+    from repro.lower.calibrate import save_record
+    from repro.runtime.fault import CircuitBreaker, RecoveryPolicy
+    from repro.runtime.inject import FaultPlan, FaultSpec, inject
+    from repro.service import (ScheduleStore, ServiceError, ServiceResult,
+                               SolveRequest, SolveServer,
+                               serve_batch_settled)
+
+    hw = eyeriss_multinode()
+    n_requests = 20 if quick else 50
+    specs = {
+        "store.read": FaultSpec(rate=0.20, kind="error"),
+        "store.write": FaultSpec(rate=0.20, kind="error"),
+        "solve.segment": FaultSpec(rate=0.10, kind="slow", delay_s=0.02),
+    }
+    plan = FaultPlan.make(20260807, specs)
+    mix = [("mlp", 8), ("mlp", 16), ("lstm", 8), ("mlp", 32)]
+    reqs = [SolveRequest.make(get_net(n, batch=b), hw)
+            for n, b in (mix[i % len(mix)] for i in range(n_requests - 1))]
+    # one rushed request exercises the deadline -> greedy floor
+    reqs.append(SolveRequest.make(get_net("lstm", batch=16), hw,
+                                  deadline_s=1e-4))
+    root = tempfile.mkdtemp(prefix="repro-chaos-bench-")
+    try:
+        server = SolveServer(
+            ScheduleStore(root),
+            breaker=CircuitBreaker(threshold=3, cooldown_s=0.2),
+            retry_policy=RecoveryPolicy(max_retries=3,
+                                        backoff_seconds=0.005,
+                                        max_backoff=0.05),
+            batch_window_s=0.002)
+        memo.clear_all()
+        t0 = time.perf_counter()
+        with inject(plan) as inj:
+            out = asyncio.run(asyncio.wait_for(
+                serve_batch_settled(server, reqs), timeout=600))
+        wall = time.perf_counter() - t0
+        results = [r for r in out if isinstance(r, ServiceResult)]
+        typed_errors = [r for r in out if isinstance(r, ServiceError)]
+        assert all(r.schedule.valid for r in results), \
+            "chaos run served an invalid schedule"
+        lat = [r.seconds for r in results]
+        paths = {
+            "store_faults_survived":
+                inj.fired.get("store.read", 0) +
+                inj.fired.get("store.write", 0),
+            "slow_solves_injected": inj.fired.get("solve.segment", 0),
+            "greedy_served":
+                sum(1 for r in results if r.source == "greedy"),
+            "degraded_flagged": sum(1 for r in results if r.degraded),
+            "breaker_opens": server.stats()["breaker"]["opens"],
+            "typed_errors": len(typed_errors),
+        }
+        record = {
+            "n_requests": len(reqs),
+            "availability":
+                (len(results) + len(typed_errors)) / len(reqs),
+            "n_results": len(results),
+            "n_typed_errors": len(typed_errors),
+            "n_degraded": paths["degraded_flagged"],
+            "p50_seconds": _pct(lat, 0.50),
+            "p99_seconds": _pct(lat, 0.99),
+            "max_seconds": max(lat, default=None),
+            "wall_seconds": wall,
+            "fault_plan": {"seed": plan.seed,
+                           "specs": {s: dataclasses.asdict(sp)
+                                     for s, sp in specs.items()}},
+            "injected": inj.summary(),
+            "paths": paths,
+            # distinct degradation mechanisms this schedule exercised
+            "paths_exercised": sum(
+                1 for k in ("store_faults_survived",
+                            "slow_solves_injected", "greedy_served")
+                if paths[k] > 0),
+            "server": server.stats(),
+        }
+        save_record(record,
+                    os.path.join(REPO_ROOT, "BENCH_robustness.json"))
+        return record
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def bench_calibration(quick: bool) -> dict:
     """Solver -> lowering -> pallas execution -> measured-vs-predicted
     calibration sweep (repro.lower.calibrate).  The full per-pair record is
@@ -372,8 +477,24 @@ def main(argv=None) -> int:
     ap.add_argument("--min-autotune-candidates", type=int, default=None,
                     help="exit nonzero if any autotuned net executed "
                     "fewer candidates than this")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also run the resilience sweep under injected "
+                    "faults (writes BENCH_robustness.json)")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="run ONLY the resilience sweep (the CI chaos "
+                    "smoke gate)")
+    ap.add_argument("--min-chaos-availability", type=float, default=None,
+                    help="exit nonzero if the fraction of chaos requests "
+                    "answered (result or typed error) is below this")
+    ap.add_argument("--max-chaos-p99", type=float, default=None,
+                    help="exit nonzero if p99 request latency under "
+                    "injected faults exceeds this many seconds")
+    ap.add_argument("--min-chaos-degraded-paths", type=int, default=None,
+                    help="exit nonzero if fewer distinct degradation "
+                    "paths were exercised than this")
     args = ap.parse_args(argv)
-    only = args.calibrate_only or args.network_only or args.service_only
+    only = args.calibrate_only or args.network_only or args.service_only \
+        or args.chaos_only
     if only and (args.min_speedup is not None
                  or args.min_interlayer_speedup is not None
                  or args.max_transformer_seconds is not None):
@@ -393,6 +514,9 @@ def main(argv=None) -> int:
     elif args.service_only:
         record = {"quick": args.quick,
                   "service": bench_service(args.quick)}
+    elif args.chaos_only:
+        record = {"quick": args.quick,
+                  "chaos": bench_chaos(args.quick)}
     else:
         record = {
             "quick": args.quick,
@@ -408,6 +532,8 @@ def main(argv=None) -> int:
             record["network"] = bench_network(args.quick)
         if args.service:
             record["service"] = bench_service(args.quick)
+        if args.chaos:
+            record["chaos"] = bench_chaos(args.quick)
     text = json.dumps(record, indent=2)
     print(text)
     # BENCH_solver.json at the repo root is the perf-trajectory record
@@ -485,6 +611,31 @@ def main(argv=None) -> int:
             if bad:
                 fails.append("autotune promoted slower-than-argmin "
                              f"schedules on {bad}")
+    ch = record.get("chaos")
+    if args.min_chaos_availability is not None:
+        if ch is None:
+            fails.append("chaos availability gate set but sweep did not "
+                         "run (pass --chaos)")
+        elif ch["availability"] < args.min_chaos_availability:
+            fails.append(f"chaos availability {ch['availability']:.3f} < "
+                         f"{args.min_chaos_availability} "
+                         f"({ch['n_requests'] - ch['n_results'] - ch['n_typed_errors']} unanswered)")
+    if args.max_chaos_p99 is not None:
+        if ch is None:
+            fails.append("chaos p99 gate set but sweep did not run "
+                         "(pass --chaos)")
+        elif ch["p99_seconds"] is None or \
+                ch["p99_seconds"] > args.max_chaos_p99:
+            fails.append(f"chaos p99 latency {ch['p99_seconds']}s > "
+                         f"{args.max_chaos_p99}s budget")
+    if args.min_chaos_degraded_paths is not None:
+        if ch is None:
+            fails.append("chaos degraded-paths gate set but sweep did "
+                         "not run (pass --chaos)")
+        elif ch["paths_exercised"] < args.min_chaos_degraded_paths:
+            fails.append(f"chaos exercised {ch['paths_exercised']} "
+                         f"degradation paths < "
+                         f"{args.min_chaos_degraded_paths}")
     if only:
         for f_ in fails:
             print("FAIL:", f_, file=sys.stderr)

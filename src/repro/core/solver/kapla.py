@@ -23,6 +23,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ...hw.template import HWTemplate
+from ...runtime import inject
 from ...workloads.layers import LayerGraph, LayerSpec
 from ..cost_model import CostBreakdown, combine_segment, evaluate_layer
 from ..directives import LayerScheme
@@ -202,6 +203,10 @@ def solve_segment(graph: LayerGraph, hw: HWTemplate, seg, consumers,
     (the conservative inter-layer check is allowed false positives, §IV-B),
     the segment degrades to coarse time-sharing of the same node regions.
     Returns (total, schemes, costs, pipelined)."""
+    # chaos hook: a seeded injector can crash ("error") or stall ("slow")
+    # this segment solve — thread-pool workers inherit the global injector
+    inject.maybe_fault("solve.segment",
+                       key=f"{graph.name}:{seg.start}:{seg.stop}")
     seg_layers = graph.layers[seg.start:seg.stop]
     names = {l.name for l in seg_layers}
     for pipelined in ((True, False) if seg.length > 1 else (False,)):
@@ -517,6 +522,34 @@ def solve(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
         best.solve_seconds = time.perf_counter() - t0
         return best
     return res[0]
+
+
+def greedy_chain(graph: LayerGraph, hw: HWTemplate) -> Chain:
+    """The trivial chain: every layer alone in its own segment on the
+    full node array, no pipelining.  Always tiles the graph, never needs
+    the DP, and its segments are valid whenever *any* schedule is — the
+    first-valid floor of the service's degradation ladder."""
+    from .interlayer import SegmentScheme
+    H, W = hw.node_array
+    return Chain(segments=tuple(
+        SegmentScheme(i, i + 1, ((H, W),), 1.0)
+        for i in range(len(graph.layers))), est_cost=0.0)
+
+
+def solve_greedy(graph: LayerGraph, hw: HWTemplate,
+                 objective: str = "energy",
+                 layer_solver=solve_intra_layer,
+                 max_workers: Optional[int] = None,
+                 **_opts) -> NetworkSchedule:
+    """First-valid greedy solve: detail-solve only the trivial chain
+    (``greedy_chain``), skipping the DP and the k_S candidate
+    enumeration.  The cheapest answer the solver can produce — what a
+    deadline-blown service request degrades to rather than timing out
+    empty-handed.  Extra solver options (k_s, max_seg_len) are accepted
+    and ignored so request options can be passed through unchanged."""
+    return solve(graph, hw, k_s=1, max_seg_len=1, objective=objective,
+                 layer_solver=layer_solver, max_workers=max_workers,
+                 seed_chains=[greedy_chain(graph, hw)], use_dp=False)
 
 
 def solve_many(items: Sequence[Tuple[LayerGraph, HWTemplate]],

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -49,12 +50,15 @@ class RecoveryStats:
 def run_with_recovery(step_fn: Callable[[int], None], start_step: int,
                       num_steps: int,
                       restore_fn: Callable[[], int],
-                      policy: RecoveryPolicy = RecoveryPolicy(),
+                      policy: Optional[RecoveryPolicy] = None,
                       on_permanent_loss: Optional[Callable[[int], None]]
                       = None,
                       sleep=time.sleep) -> RecoveryStats:
     """Drive ``step_fn(step)`` for ``num_steps``, restoring via
     ``restore_fn() -> resume_step`` after transient failures."""
+    # default constructed per call: a shared module-level instance would
+    # leak one caller's tweaks into every later call
+    policy = policy if policy is not None else RecoveryPolicy()
     stats = RecoveryStats()
     step = start_step
     retries = 0
@@ -112,6 +116,68 @@ class ElasticPlanner:
         microbatch — and therefore convergence behaviour — unchanged)."""
         per_replica = global_batch // old_data_axis
         return per_replica * data_axis
+
+
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker (closed -> open -> half-open).
+
+    ``threshold`` consecutive failures open the circuit; while open,
+    ``allow()`` is False so callers skip the protected dependency (the
+    schedule service degrades to solve-without-caching when the store
+    trips it).  After ``cooldown_s`` one probe call is allowed
+    (half-open); its success closes the circuit, its failure re-opens.
+    Thread-safe — the server touches it from executor threads.
+    """
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 5.0,
+                 clock=time.monotonic):
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.clock = clock
+        self._failures = 0
+        self._opened_at: Optional[float] = None
+        self._probing = False
+        self._lock = threading.Lock()
+        self.opens = 0
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            if self._opened_at is None:
+                return "closed"
+            if self.clock() - self._opened_at >= self.cooldown_s:
+                return "half-open"
+            return "open"
+
+    def allow(self) -> bool:
+        with self._lock:
+            if self._opened_at is None:
+                return True
+            if self.clock() - self._opened_at < self.cooldown_s:
+                return False
+            if self._probing:                   # one probe at a time
+                return False
+            self._probing = True
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._failures = 0
+            self._opened_at = None
+            self._probing = False
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._failures += 1
+            self._probing = False
+            if self._failures >= self.threshold:
+                if self._opened_at is None:
+                    self.opens += 1
+                self._opened_at = self.clock()
+
+    def stats(self) -> dict:
+        return {"state": self.state, "opens": self.opens,
+                "consecutive_failures": self._failures}
 
 
 class StepHeartbeat:

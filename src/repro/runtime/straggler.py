@@ -51,23 +51,62 @@ class StragglerDetector:
 
 
 class BackupDispatcher:
-    """speculative duplicate execution with a deadline."""
+    """Speculative duplicate execution with a deadline.
+
+    A context manager (the pool is real OS threads; relying on GC to
+    reap it leaks workers): ``with BackupDispatcher(0.5) as bd: ...``.
+    ``run`` races primary against a deadline-launched backup, returns the
+    first *successful* result, and cancels the loser (a not-yet-started
+    loser is dropped; a running one finishes but its result is ignored).
+    A worker that raises is not a winner — the race falls through to the
+    other worker, and only when both raise does ``run`` re-raise the
+    primary's error.
+    """
 
     def __init__(self, deadline_seconds: float, workers: int = 2):
         self.deadline = deadline_seconds
         self.pool = ThreadPoolExecutor(max_workers=workers)
+        self.cancelled_losers = 0
+        self.failovers = 0
+
+    def __enter__(self) -> "BackupDispatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _finish(self, winner, loser) -> object:
+        if loser is not None and loser.cancel():
+            self.cancelled_losers += 1
+        return winner.result()
 
     def run(self, primary: Callable[[], object],
             backup: Callable[[], object]) -> object:
         f1 = self.pool.submit(primary)
         done, _ = wait([f1], timeout=self.deadline,
                        return_when=FIRST_COMPLETED)
-        if done:
+        if done and f1.exception() is None:
             return f1.result()
+        if done:                        # primary raised before the deadline
+            self.failovers += 1
+            f2 = self.pool.submit(backup)
+            return self._finish(f2, None)
         f2 = self.pool.submit(backup)
-        done, _ = wait([f1, f2], return_when=FIRST_COMPLETED)
-        winner = done.pop()
-        return winner.result()
+        pending = {f1, f2}
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            winners = [f for f in done if f.exception() is None]
+            if winners:
+                if not pending and len(winners) == len(done) == 2:
+                    # both finished between waits: keep the primary
+                    return self._finish(f1, f2)
+                loser = pending.pop() if pending else None
+                if winners[0] is f2:
+                    self.failovers += 1
+                return self._finish(winners[0], loser)
+            # everything done so far raised; fall through to the rest
+        # both raised: surface the primary's error
+        return f1.result()
 
     def close(self):
         self.pool.shutdown(wait=False, cancel_futures=True)

@@ -29,15 +29,17 @@ that *keeps* its winners and serves them to many concurrent clients:
       measured latency recorded alongside the predicted cost.
 """
 from .signature import family_signature, schedule_signature, solver_options
-from .store import ScheduleStore, StoreRecord
-from .client import LocalClient, ServiceResult, SolveRequest
-from .server import SolveServer, serve_batch
+from .store import ScheduleStore, StoreError, StoreRecord
+from .client import (LocalClient, ServiceError, ServiceResult,
+                     SolveRequest, StoreGuard, resolve_request)
+from .server import SolveServer, serve_batch, serve_batch_settled
 from .autotune import autotune_network
 
 __all__ = [
     "family_signature", "schedule_signature", "solver_options",
-    "ScheduleStore", "StoreRecord",
-    "LocalClient", "ServiceResult", "SolveRequest",
-    "SolveServer", "serve_batch",
+    "ScheduleStore", "StoreError", "StoreRecord",
+    "LocalClient", "ServiceError", "ServiceResult", "SolveRequest",
+    "StoreGuard", "resolve_request",
+    "SolveServer", "serve_batch", "serve_batch_settled",
     "autotune_network",
 ]

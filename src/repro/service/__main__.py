@@ -1,17 +1,22 @@
 """Schedule-service CLI.
 
-    python -m repro.service solve    --net resnet --batch 64
+    python -m repro.service solve    --net resnet --batch 64 [--deadline S]
     python -m repro.service get      --net resnet --batch 64 [--json]
     python -m repro.service stats
     python -m repro.service warm     --net resnet --batch 32
     python -m repro.service autotune --net mlp --batch 4 -k 3
+    python -m repro.service repair
 
-``solve`` answers through ``LocalClient`` (store hit -> warm near-miss ->
-cold solve) and reports the source + wall clock, so running it twice
-demonstrates the cached path.  ``warm`` forces a warm-start solve seeded
-from the nearest family record (same net, different batch).  ``autotune``
-lowers + executes the top-k candidates and promotes the measured winner.
-The store dir defaults to ``$REPRO_STORE_DIR`` or ``.repro_store``.
+``solve`` answers through ``LocalClient`` down the degradation ladder
+(store hit -> warm near-miss -> cold solve -> greedy first-valid when a
+``--deadline`` expires) and reports the source + wall clock, so running
+it twice demonstrates the cached path.  ``warm`` forces a warm-start
+solve seeded from the nearest family record (same net, different batch).
+``autotune`` lowers + executes the top-k candidates and promotes the
+measured winner.  ``stats`` includes the resilience counters (corrupt /
+quarantined / io_errors / rebuilds).  ``repair`` rebuilds the store
+index from the records dir, quarantining corrupt records.  The store dir
+defaults to ``$REPRO_STORE_DIR`` or ``.repro_store``.
 """
 from __future__ import annotations
 
@@ -47,14 +52,19 @@ def _add_common(p: argparse.ArgumentParser, net: bool = True) -> None:
 def _request(args) -> SolveRequest:
     graph = get_net(args.net, batch=args.batch, training=args.training)
     hw = eyeriss_multinode()
-    return SolveRequest.make(graph, hw, objective=args.objective,
+    return SolveRequest.make(graph, hw,
+                             deadline_s=getattr(args, "deadline", None),
+                             objective=args.objective,
                              k_s=args.k_s, max_seg_len=args.max_seg_len)
 
 
 def _print_result(res, hw_freq: float) -> None:
     s = res.schedule
-    print(f"{s.graph_name}: source={res.source} "
+    flags = " DEGRADED" if res.degraded else ""
+    print(f"{s.graph_name}: source={res.source}{flags} "
           f"sig={res.signature[:12]} in {res.seconds * 1e3:.1f} ms")
+    if res.error:
+        print(f"  degraded by: {res.error}")
     if s.valid:
         print(f"  energy {s.total_energy_pj / 1e9:.2f} mJ | latency "
               f"{s.total_latency_cycles / hw_freq * 1e3:.2f} ms "
@@ -65,10 +75,15 @@ def _print_result(res, hw_freq: float) -> None:
 
 
 def cmd_solve(args) -> int:
+    from .client import ServiceError
     store = ScheduleStore(args.store_dir)
     client = LocalClient(store)
     req = _request(args)
-    res = client.solve_request(req)
+    try:
+        res = client.solve_request(req)
+    except ServiceError as e:
+        print(f"ERROR {e.signature[:12]}: {e}")
+        return 2
     _print_result(res, req.hw.freq_hz)
     print("  store:", json.dumps(store.stats()))
     return 0 if res.schedule.valid else 1
@@ -126,11 +141,26 @@ def cmd_warm(args) -> int:
     return 0
 
 
+def cmd_repair(args) -> int:
+    """Rebuild the index from the records dir, quarantining corrupt
+    records on the way — the manual entry point to the same self-healing
+    the store runs automatically when it detects index damage."""
+    store = ScheduleStore(args.store_dir)
+    n = store.rebuild_index()
+    print(f"rebuilt index: {n} records, "
+          f"{store.quarantined} quarantined, "
+          f"{sum(1 for v in store._family.values() if v)} families")
+    print(json.dumps(store.stats(), indent=1))
+    return 0
+
+
 def cmd_autotune(args) -> int:
     store = ScheduleStore(args.store_dir)
     req = _request(args)
     report = autotune_network(req.graph, req.hw, store=store, k=args.k,
-                              iters=args.iters, **req.opts)
+                              iters=args.iters,
+                              candidate_timeout_s=args.candidate_timeout,
+                              **req.opts)
     print(json.dumps(report, indent=1))
     return 0 if report.get("n_executed") else 1
 
@@ -141,8 +171,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     sub = ap.add_subparsers(dest="verb", required=True)
 
     p = sub.add_parser("solve", help="serve one schedule "
-                       "(cache -> warm -> cold)")
+                       "(cache -> warm -> cold -> greedy)")
     _add_common(p)
+    p.add_argument("--deadline", type=float, default=None,
+                   help="per-request deadline in seconds; past it the "
+                   "answer degrades to the greedy floor")
     p.set_defaults(fn=cmd_solve)
 
     p = sub.add_parser("get", help="look up the stored record")
@@ -160,6 +193,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_common(p)
     p.set_defaults(fn=cmd_warm)
 
+    p = sub.add_parser("repair", help="rebuild the store index, "
+                       "quarantining corrupt records")
+    _add_common(p, net=False)
+    p.set_defaults(fn=cmd_repair)
+
     p = sub.add_parser("autotune", help="measure top-k candidates and "
                        "promote the fastest")
     _add_common(p)
@@ -167,6 +205,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="candidate schedules to execute")
     p.add_argument("--iters", type=int, default=2,
                    help="timing iterations per candidate")
+    p.add_argument("--candidate-timeout", type=float, default=None,
+                   help="disqualify a candidate whose lower+verify+"
+                   "measure exceeds this many seconds")
     p.set_defaults(fn=cmd_autotune)
 
     args = ap.parse_args(argv)

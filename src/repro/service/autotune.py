@@ -16,29 +16,75 @@ counterpart of the calibration sweeps in ``repro.lower.calibrate``.
 """
 from __future__ import annotations
 
+import math
 import time
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from typing import Dict, List, Optional
 
 from ..core.solver.kapla import solve_topk
 from ..hw.template import HWTemplate
+from ..runtime import inject
 from ..workloads.layers import LayerGraph
 from .signature import schedule_signature, solver_options
 from .store import ScheduleStore
+
+
+class _Skip(Exception):
+    """Internal: candidate disqualified for a recorded reason."""
+
+
+def _run_candidate(rank: int, sched, graph: LayerGraph, hw: HWTemplate,
+                   seed: int, iters: int, interpret: bool,
+                   tol: float) -> Dict:
+    """Lower + verify + measure one candidate (raises ``_Skip`` with the
+    disqualification reason).  Runs inside the per-candidate worker so a
+    timeout can abandon it."""
+    # execution lives behind jax; keep the service core numpy-only
+    from ..lower.netexec import (compare_network, make_network_inputs,
+                                 measure_network, network_runner)
+    from ..lower.netplan import lower_network
+
+    # chaos hook: slow sleeps here (counts against the candidate
+    # timeout), error raises, nan poisons the measurement below
+    spec = inject.maybe_fault("autotune.measure", key=str(rank))
+    nplan = lower_network(sched, graph, hw)
+    bad = nplan.invalid_layers()
+    if bad:
+        raise _Skip("; ".join(f"{n}: {r}" for n, r in bad))
+    inputs = make_network_inputs(nplan, seed)
+    run = network_runner(nplan, inputs, interpret=interpret, jit=True)
+    ver = compare_network(nplan, run(), inputs, tol)
+    if not ver.ok:
+        raise _Skip(f"numerics {ver.max_rel_err:.2e} at "
+                    f"{ver.worst_layer}")
+    measured = measure_network(nplan, iters=iters, warmup=0, runner=run)
+    if spec is not None and spec.kind == "nan":
+        measured = float("nan")
+    return {
+        "rank": rank,
+        "n_segments": 0 if sched.chain is None
+        else len(sched.chain.segments),
+        "predicted_cycles": sched.total_latency_cycles,
+        "predicted_energy_pj": sched.total_energy_pj,
+        "max_rel_err": ver.max_rel_err,
+        "measured_seconds": measured,
+    }
 
 
 def autotune_network(graph: LayerGraph, hw: HWTemplate,
                      store: Optional[ScheduleStore] = None, k: int = 3,
                      iters: int = 2, interpret: bool = True, seed: int = 0,
                      max_workers: Optional[int] = None,
-                     tol: float = 1e-3, **options) -> Dict:
+                     tol: float = 1e-3,
+                     candidate_timeout_s: Optional[float] = None,
+                     **options) -> Dict:
     """Autotune one network; returns a JSON-safe report.  Candidates that
-    fail to lower or verify are skipped with reasons — the report's
+    fail to lower or verify — or that crash, return a non-finite
+    measurement, or exceed ``candidate_timeout_s`` — are disqualified
+    with a recorded reason instead of aborting the run; the report's
     ``candidates`` are the ones that really executed."""
-    # execution lives behind jax; keep the service core numpy-only
     from ..lower.calibrate import spearman
-    from ..lower.netexec import (compare_network, make_network_inputs,
-                                 measure_network, network_runner)
-    from ..lower.netplan import lower_network
 
     opts = solver_options(**options)
     t0 = time.perf_counter()
@@ -46,31 +92,37 @@ def autotune_network(graph: LayerGraph, hw: HWTemplate,
     entries: List[Dict] = []
     skipped: List[Dict] = []
     for rank, sched in enumerate(cands):
-        nplan = lower_network(sched, graph, hw)
-        bad = nplan.invalid_layers()
-        if bad:
-            skipped.append({"rank": rank, "reason": "; ".join(
-                f"{n}: {r}" for n, r in bad)})
+        try:
+            if candidate_timeout_s is None:
+                entry = _run_candidate(rank, sched, graph, hw, seed,
+                                       iters, interpret, tol)
+            else:
+                # a fresh single-thread pool per candidate: a hung
+                # measurement is abandoned (the thread leaks until it
+                # returns, the run does not)
+                ex = ThreadPoolExecutor(max_workers=1)
+                try:
+                    entry = ex.submit(
+                        _run_candidate, rank, sched, graph, hw, seed,
+                        iters, interpret, tol
+                    ).result(timeout=candidate_timeout_s)
+                finally:
+                    ex.shutdown(wait=False)
+        except _Skip as e:
+            skipped.append({"rank": rank, "reason": str(e)})
             continue
-        inputs = make_network_inputs(nplan, seed)
-        run = network_runner(nplan, inputs, interpret=interpret, jit=True)
-        ver = compare_network(nplan, run(), inputs, tol)
-        if not ver.ok:
-            skipped.append({"rank": rank,
-                            "reason": f"numerics {ver.max_rel_err:.2e} at "
-                                      f"{ver.worst_layer}"})
+        except FutureTimeout:
+            skipped.append({"rank": rank, "reason":
+                            f"timeout after {candidate_timeout_s}s"})
             continue
-        measured = measure_network(nplan, iters=iters, warmup=0,
-                                   runner=run)
-        entries.append({
-            "rank": rank,
-            "n_segments": 0 if sched.chain is None
-            else len(sched.chain.segments),
-            "predicted_cycles": sched.total_latency_cycles,
-            "predicted_energy_pj": sched.total_energy_pj,
-            "max_rel_err": ver.max_rel_err,
-            "measured_seconds": measured,
-        })
+        except Exception as e:          # crash disqualifies, never aborts
+            skipped.append({"rank": rank, "reason": f"crashed: {e!r}"})
+            continue
+        if not math.isfinite(entry["measured_seconds"]):
+            skipped.append({"rank": rank, "reason":
+                            "non-finite measurement"})
+            continue
+        entries.append(entry)
     report: Dict = {
         "net": graph.name,
         "hw": hw.name,
@@ -109,9 +161,13 @@ def autotune_network(graph: LayerGraph, hw: HWTemplate,
             "rank_agreement": report.get("rank_agreement"),
             "n_candidates_executed": len(entries),
         }
-        store.put(cands[best["rank"]], graph, hw, opts, sig=sig,
-                  measured=measured_meta)
-        report["promoted"] = True
+        try:
+            store.put(cands[best["rank"]], graph, hw, opts, sig=sig,
+                      measured=measured_meta)
+            report["promoted"] = True
+        except Exception as e:      # a broken store loses the promotion,
+            report["promoted"] = False      # never the measurements
+            report["promote_error"] = repr(e)
     return report
 
 

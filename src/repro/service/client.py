@@ -1,11 +1,21 @@
 """Client-side types + the synchronous in-process client.
 
-``SolveRequest`` names one solve: a graph, a hardware template and the
-normalized solver options.  ``LocalClient`` serves requests directly —
-store lookup, warm-start near-miss, cold solve — without an event loop,
-sharing the exact answer path of the async ``SolveServer`` (both resolve
-cached → warm → cold in that order and write winners back to the store),
-so tests and scripts exercise the same semantics synchronously.
+``SolveRequest`` names one solve: a graph, a hardware template, the
+normalized solver options and an optional per-request deadline.
+``LocalClient`` serves requests directly — store lookup, warm-start
+near-miss, cold solve — without an event loop, sharing the exact answer
+path of the async ``SolveServer``: both walk the same **degradation
+ladder** through ``resolve_request``:
+
+    cached  ->  warm  ->  cold  ->  greedy (first-valid, ``degraded``)
+
+with bounded-backoff retries on transient solve errors
+(``runtime.fault.RecoveryPolicy``) and circuit-broken store access
+(``StoreGuard``): a broken store degrades the service to
+solve-without-caching instead of failing requests.  A request that
+exhausts the whole ladder raises the typed ``ServiceError`` — the
+service's liveness contract is *result or typed error*, never a hang or
+an anonymous crash.
 """
 from __future__ import annotations
 
@@ -14,27 +24,57 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.solver.kapla import (NetworkSchedule, seed_chains_from, solve,
-                                 solve_many, warm_layer_solver)
+                                 solve_greedy, solve_many,
+                                 warm_layer_solver)
 from ..hw.template import HWTemplate
+from ..runtime.fault import CircuitBreaker, NodeFailure, RecoveryPolicy
+from ..runtime.inject import InjectedFault
 from ..workloads.layers import LayerGraph
 from .signature import family_signature, schedule_signature, solver_options
-from .store import ScheduleStore, StoreRecord
+from .store import ScheduleStore, StoreError, StoreRecord
+
+#: solve errors worth retrying (fresh attempt may succeed); anything else
+#: is treated as a poisoned request and drops straight to the greedy floor
+TRANSIENT_ERRORS = (InjectedFault, NodeFailure, OSError, TimeoutError)
+
+#: default retry policy for service solves: cheap, bounded, fast backoff —
+#: KAPLA solves are ~sub-second, so retrying beats queueing behind a hang
+DEFAULT_RETRY_POLICY = RecoveryPolicy(max_retries=2, backoff_seconds=0.02,
+                                      backoff_factor=2.0, max_backoff=0.5)
+
+
+class ServiceError(RuntimeError):
+    """Typed terminal failure for one request: the ladder was exhausted
+    (or the request was poisoned beyond even the greedy floor)."""
+
+    def __init__(self, msg: str, signature: str = "", reason: str = "",
+                 attempts: int = 0):
+        super().__init__(msg)
+        self.signature = signature
+        self.reason = reason
+        self.attempts = attempts
 
 
 @dataclasses.dataclass(frozen=True)
 class SolveRequest:
     """One schedule request; ``options`` are ``signature.solver_options``
-    overrides (k_s, max_seg_len, objective)."""
+    overrides (k_s, max_seg_len, objective).  ``deadline_s`` (never part
+    of the signature) bounds the service time budget: a request past its
+    deadline degrades to the greedy floor instead of queueing a full
+    solve."""
 
     graph: LayerGraph
     hw: HWTemplate
     options: Tuple[Tuple[str, object], ...] = ()
+    deadline_s: Optional[float] = None
 
     @staticmethod
     def make(graph: LayerGraph, hw: HWTemplate,
-             **options) -> "SolveRequest":
+             deadline_s: Optional[float] = None, **options
+             ) -> "SolveRequest":
         opts = solver_options(**options)
-        return SolveRequest(graph, hw, tuple(sorted(opts.items())))
+        return SolveRequest(graph, hw, tuple(sorted(opts.items())),
+                            deadline_s)
 
     @property
     def opts(self) -> Dict:
@@ -49,8 +89,11 @@ class SolveRequest:
 
 @dataclasses.dataclass
 class ServiceResult:
-    """A served schedule plus provenance: ``source`` is ``"cached"`` (store
-    hit), ``"warm"`` (near-miss-seeded solve) or ``"cold"`` (full solve);
+    """A served schedule plus provenance: ``source`` is ``"cached"``
+    (store hit), ``"warm"`` (near-miss-seeded solve), ``"cold"`` (full
+    solve) or ``"greedy"`` (first-valid floor); ``degraded`` marks
+    answers below the request's normal quality (greedy floor);
+    ``error`` carries the fault that forced the degradation, if any;
     ``seconds`` is the service-side wall clock for this answer."""
 
     schedule: NetworkSchedule
@@ -58,6 +101,53 @@ class ServiceResult:
     source: str
     seconds: float
     record: Optional[StoreRecord] = None
+    degraded: bool = False
+    error: Optional[str] = None
+
+
+class StoreGuard:
+    """Circuit-broken store access.  ``StoreError``s trip the breaker;
+    while it is open the store is skipped entirely (reads miss, writes
+    drop) so a broken store degrades the service to solve-without-caching
+    instead of failing every request."""
+
+    def __init__(self, store: ScheduleStore,
+                 breaker: Optional[CircuitBreaker] = None):
+        self.store = store
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self.errors = 0
+        self.skipped = 0
+
+    def _guard(self, fn, *args, default=None, **kwargs):
+        if not self.breaker.allow():
+            self.skipped += 1
+            return default
+        try:
+            out = fn(*args, **kwargs)
+        except StoreError:
+            self.errors += 1
+            self.breaker.record_failure()
+            return default
+        self.breaker.record_success()
+        return out
+
+    def get(self, sig: str, graph: Optional[LayerGraph] = None
+            ) -> Optional[NetworkSchedule]:
+        return self._guard(self.store.get, sig, graph)
+
+    def put(self, schedule: NetworkSchedule, graph: LayerGraph,
+            hw: HWTemplate, options=None, sig: Optional[str] = None
+            ) -> Optional[StoreRecord]:
+        return self._guard(self.store.put, schedule, graph, hw, options,
+                           sig=sig)
+
+    def warm_context(self, req: "SolveRequest", sig: str):
+        return self._guard(warm_context, self.store, req, sig)
+
+    def stats(self) -> Dict:
+        return {**self.store.stats(), "store_errors": self.errors,
+                "store_skipped": self.skipped,
+                "breaker": self.breaker.stats()}
 
 
 def warm_context(store: ScheduleStore, req: SolveRequest, sig: str):
@@ -80,52 +170,133 @@ def warm_context(store: ScheduleStore, req: SolveRequest, sig: str):
     return None
 
 
+def resolve_request(guard: StoreGuard, req: SolveRequest,
+                    sig: Optional[str] = None,
+                    policy: Optional[RecoveryPolicy] = None,
+                    max_workers: Optional[int] = None,
+                    warm_start: bool = True,
+                    t0: Optional[float] = None,
+                    sleep=time.sleep) -> ServiceResult:
+    """Answer one request down the degradation ladder.
+
+    cached -> warm -> cold (with bounded-backoff retries on transient
+    errors) -> greedy first-valid (flagged ``degraded``).  ``t0`` is the
+    request's submit time (``time.perf_counter`` clock) — deadlines are
+    measured from submission, so queue time counts against the budget.
+    Raises ``ServiceError`` when even the greedy floor fails.
+    """
+    t0 = time.perf_counter() if t0 is None else t0
+    sig = sig if sig is not None else req.signature()
+    policy = policy if policy is not None else DEFAULT_RETRY_POLICY
+    deadline_at = None if req.deadline_s is None else t0 + req.deadline_s
+
+    def expired() -> bool:
+        return deadline_at is not None and time.perf_counter() > deadline_at
+
+    cached = guard.get(sig, req.graph)
+    if cached is not None:
+        return ServiceResult(cached, sig, "cached",
+                             time.perf_counter() - t0)
+
+    attempts = 0
+    backoff = policy.backoff_seconds
+    last_err: Optional[BaseException] = None
+    while not expired() and attempts <= policy.max_retries:
+        attempts += 1
+        try:
+            ctx = guard.warm_context(req, sig) if warm_start else None
+            src = "cold"
+            sched = None
+            if ctx is not None:
+                seeds, solver, _ = ctx
+                sched = solve(req.graph, req.hw, max_workers=max_workers,
+                              seed_chains=seeds, use_dp=False,
+                              layer_solver=solver, **req.opts)
+                src = "warm"
+                if not sched.valid:
+                    sched = None        # seed did not transfer: cold
+            if sched is None:
+                src = "cold"
+                sched = solve(req.graph, req.hw, max_workers=max_workers,
+                              **req.opts)
+            rec = guard.put(sched, req.graph, req.hw, req.opts, sig=sig) \
+                if sched.valid else None
+            return ServiceResult(sched, sig, src,
+                                 time.perf_counter() - t0, rec)
+        except TRANSIENT_ERRORS as e:
+            last_err = e
+            if attempts > policy.max_retries or expired():
+                break
+            sleep(min(backoff, policy.max_backoff))
+            backoff *= policy.backoff_factor
+        except Exception as e:          # poisoned request: no retry value
+            last_err = e
+            break
+
+    # ladder floor: first-valid greedy, flagged degraded
+    try:
+        sched = solve_greedy(req.graph, req.hw, max_workers=max_workers,
+                             **req.opts)
+        if sched.valid:
+            return ServiceResult(
+                sched, sig, "greedy", time.perf_counter() - t0,
+                degraded=True,
+                error=None if last_err is None else repr(last_err))
+        if last_err is None:
+            # nothing faulted — the request has no feasible schedule at
+            # all; answer with the invalid schedule like a plain solve
+            return ServiceResult(sched, sig, "cold",
+                                 time.perf_counter() - t0)
+    except Exception as e:
+        last_err = last_err if last_err is not None else e
+    raise ServiceError(
+        f"request {sig[:12]} failed after {attempts} attempt(s): "
+        f"{last_err!r}", signature=sig, reason=repr(last_err),
+        attempts=attempts)
+
+
 class LocalClient:
     """Synchronous in-process schedule client over one ``ScheduleStore``.
 
-    ``solve`` answers one request; ``solve_batch`` coalesces a list —
-    identical signatures are deduped and the distinct misses' segments are
-    pooled into one ThreadPoolExecutor pass (``kapla.solve_many``)."""
+    ``solve`` answers one request down the full degradation ladder;
+    ``solve_batch`` coalesces a list — identical signatures are deduped
+    and the distinct misses' segments are pooled into one
+    ThreadPoolExecutor pass (``kapla.solve_many``); a fault inside the
+    pooled solve isolates to per-request resolution so one poisoned
+    request cannot fail its batch."""
 
     def __init__(self, store: Optional[ScheduleStore] = None,
                  max_workers: Optional[int] = None,
-                 warm_start: bool = True):
+                 warm_start: bool = True,
+                 breaker: Optional[CircuitBreaker] = None,
+                 retry_policy: Optional[RecoveryPolicy] = None):
         self.store = store if store is not None else ScheduleStore()
+        self.guard = StoreGuard(self.store, breaker)
         self.max_workers = max_workers
         self.warm_start = warm_start
+        self.retry_policy = retry_policy
+        self.degraded = 0
+        self.errors = 0
 
     # -- single request ------------------------------------------------------
     def solve(self, graph: LayerGraph, hw: HWTemplate,
+              deadline_s: Optional[float] = None,
               **options) -> ServiceResult:
-        req = SolveRequest.make(graph, hw, **options)
+        req = SolveRequest.make(graph, hw, deadline_s=deadline_s,
+                                **options)
         return self.solve_request(req)
 
     def solve_request(self, req: SolveRequest) -> ServiceResult:
-        t0 = time.perf_counter()
-        sig = req.signature()
-        cached = self.store.get(sig, req.graph)
-        if cached is not None:
-            return ServiceResult(cached, sig, "cached",
-                                 time.perf_counter() - t0)
-        ctx = self._warm_context(req, sig)
-        if ctx is not None:
-            seeds, solver, _ = ctx
-            sched = solve(req.graph, req.hw, max_workers=self.max_workers,
-                          seed_chains=seeds, use_dp=False,
-                          layer_solver=solver, **req.opts)
-            if sched.valid:
-                rec = self.store.put(sched, req.graph, req.hw, req.opts,
-                                     sig=sig)
-                return ServiceResult(sched, sig, "warm",
-                                     time.perf_counter() - t0, rec)
-        sched = solve(req.graph, req.hw, max_workers=self.max_workers,
-                      **req.opts)
-        rec = None
-        if sched.valid:
-            rec = self.store.put(sched, req.graph, req.hw, req.opts,
-                                 sig=sig)
-        return ServiceResult(sched, sig, "cold",
-                             time.perf_counter() - t0, rec)
+        try:
+            res = resolve_request(self.guard, req,
+                                  policy=self.retry_policy,
+                                  max_workers=self.max_workers,
+                                  warm_start=self.warm_start)
+        except ServiceError:
+            self.errors += 1
+            raise
+        self.degraded += bool(res.degraded)
+        return res
 
     # -- batched requests ----------------------------------------------------
     def solve_batch(self, reqs: Sequence[SolveRequest]
@@ -133,7 +304,10 @@ class LocalClient:
         """Answer a batch: dedupe identical signatures, answer fresh ones
         from the store, and solve the distinct misses *together* so their
         segments share one thread pool (the server's coalescing path,
-        minus the event loop)."""
+        minus the event loop).  A fault inside the pooled solve falls
+        back to per-request isolated resolution; a request that fails
+        even isolated resolution gets a ``ServiceResult`` carrying the
+        typed error string rather than poisoning its neighbours."""
         t0 = time.perf_counter()
         sigs = [r.signature() for r in reqs]
         results: Dict[str, ServiceResult] = {}
@@ -143,7 +317,7 @@ class LocalClient:
         for sig, req in zip(sigs, reqs):
             if sig in results or sig in miss_set:
                 continue
-            cached = self.store.get(sig, req.graph)
+            cached = self.guard.get(sig, req.graph)
             if cached is not None:
                 results[sig] = ServiceResult(cached, sig, "cached",
                                              time.perf_counter() - t0)
@@ -155,8 +329,6 @@ class LocalClient:
             by_opts: Dict[Tuple, List[int]] = {}
             for i, req in enumerate(miss_reqs):
                 by_opts.setdefault(req.options, []).append(i)
-            solved: Dict[int, NetworkSchedule] = {}
-            sources: Dict[int, str] = {}
             for opt_key, idxs in by_opts.items():
                 group = [miss_reqs[i] for i in idxs]
                 ctxs = [self._warm_context(r, s)
@@ -164,38 +336,67 @@ class LocalClient:
                                         (miss_sigs[i] for i in idxs))]
                 seeds = [c[0] if c else None for c in ctxs]
                 solvers = [c[1] if c else None for c in ctxs]
-                res = solve_many([(r.graph, r.hw) for r in group],
-                                 max_workers=self.max_workers,
-                                 seed_chains=seeds, layer_solvers=solvers,
-                                 **dict(opt_key))
+                try:
+                    res = solve_many([(r.graph, r.hw) for r in group],
+                                     max_workers=self.max_workers,
+                                     seed_chains=seeds,
+                                     layer_solvers=solvers,
+                                     **dict(opt_key))
+                except Exception:
+                    # pooled solve faulted: isolate per request so one
+                    # poisoned request fails alone
+                    for i in idxs:
+                        results[miss_sigs[i]] = self._isolated(
+                            miss_reqs[i], miss_sigs[i], t0)
+                    continue
                 for i, sched, seed in zip(idxs, res, seeds):
+                    req, sig = miss_reqs[i], miss_sigs[i]
+                    src = "warm" if seed else "cold"
                     if seed and not sched.valid:
                         # a warm seed that does not transfer falls back
                         # to a full cold solve
-                        sched = solve(miss_reqs[i].graph, miss_reqs[i].hw,
-                                      max_workers=self.max_workers,
-                                      **miss_reqs[i].opts)
-                        seed = None
-                    solved[i] = sched
-                    sources[i] = "warm" if seed else "cold"
-            for i, (sig, req) in enumerate(zip(miss_sigs, miss_reqs)):
-                sched = solved[i]
-                rec = None
-                if sched.valid:
-                    rec = self.store.put(sched, req.graph, req.hw,
-                                         req.opts, sig=sig)
-                results[sig] = ServiceResult(
-                    sched, sig, sources[i], time.perf_counter() - t0, rec)
+                        try:
+                            sched = solve(req.graph, req.hw,
+                                          max_workers=self.max_workers,
+                                          **req.opts)
+                        except Exception:
+                            results[sig] = self._isolated(req, sig, t0)
+                            continue
+                        src = "cold"
+                    rec = self.guard.put(sched, req.graph, req.hw,
+                                         req.opts, sig=sig) \
+                        if sched.valid else None
+                    results[sig] = ServiceResult(
+                        sched, sig, src, time.perf_counter() - t0, rec)
         return [results[sig] for sig in sigs]
 
     # -- helpers -------------------------------------------------------------
+    def _isolated(self, req: SolveRequest, sig: str,
+                  t0: float) -> ServiceResult:
+        try:
+            res = resolve_request(self.guard, req, sig=sig,
+                                  policy=self.retry_policy,
+                                  max_workers=self.max_workers,
+                                  warm_start=self.warm_start, t0=t0)
+        except ServiceError as e:
+            self.errors += 1
+            from ..core.solver.kapla import _invalid_schedule
+            return ServiceResult(
+                _invalid_schedule(req.graph, None), sig, "error",
+                time.perf_counter() - t0, degraded=True, error=str(e))
+        self.degraded += bool(res.degraded)
+        return res
+
     def _warm_context(self, req: SolveRequest, sig: str):
         if not self.warm_start:
             return None
-        return warm_context(self.store, req, sig)
+        return self.guard.warm_context(req, sig)
 
     def stats(self) -> Dict:
-        return self.store.stats()
+        return {**self.guard.stats(), "degraded": self.degraded,
+                "errors": self.errors}
 
 
-__all__ = ["SolveRequest", "ServiceResult", "LocalClient", "warm_context"]
+__all__ = ["SolveRequest", "ServiceResult", "ServiceError", "StoreGuard",
+           "LocalClient", "warm_context", "resolve_request",
+           "TRANSIENT_ERRORS", "DEFAULT_RETRY_POLICY"]

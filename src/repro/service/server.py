@@ -1,11 +1,13 @@
-"""Async batched solve server.
+"""Async batched solve server — hardened.
 
 Clients ``submit`` ``SolveRequest``s; a single coalescing loop
 (``serve_forever``) drains the queue in windows and answers each batch:
 
   1. identical in-flight signatures are **deduped** — the second submit of
      a signature awaits the first's future, never enqueues a second solve;
-  2. fresh signatures are answered **from the store**;
+  2. fresh signatures are answered **from the store** (through the
+     ``StoreGuard`` circuit breaker: a broken store degrades the server to
+     solve-without-caching instead of failing requests);
   3. the remaining misses are solved **together**: each request's DP runs
      (vectorized, cheap), then the distinct detail-solve segments of all
      requests in the batch are pooled into one ThreadPoolExecutor pass
@@ -13,6 +15,19 @@ Clients ``submit`` ``SolveRequest``s; a single coalescing loop
      loop keeps accepting submissions;
   4. winners are written back to the store; family near-misses seed
      warm-start chains exactly like ``LocalClient``.
+
+Resilience contract (the chaos suite's invariants):
+
+* **liveness** — every submitted request resolves to a ``ServiceResult``
+  or raises the typed ``ServiceError``; a fault never strands a future;
+* **failure isolation** — an exception inside a coalesced batch solve
+  re-resolves each member independently (``resolve_request``), so a
+  poisoned request fails alone;
+* **deadlines** — a request past its ``deadline_s`` (measured from
+  submission, queue time included) degrades down the ladder
+  cached -> warm -> cold -> greedy first-valid, flagged ``degraded``;
+* **bounded retries** — transient solve errors retry with bounded
+  backoff (``runtime.fault.RecoveryPolicy``).
 
 The server is in-process (asyncio futures, no sockets): the unit the CLI
 and tests drive, and the piece a transport layer would wrap.
@@ -24,7 +39,9 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from ..core.solver.kapla import solve_many
-from .client import ServiceResult, SolveRequest, warm_context
+from ..runtime.fault import CircuitBreaker, RecoveryPolicy
+from .client import (ServiceError, ServiceResult, SolveRequest, StoreGuard,
+                     resolve_request)
 from .store import ScheduleStore
 
 _STOP = object()
@@ -36,11 +53,15 @@ class SolveServer:
     def __init__(self, store: Optional[ScheduleStore] = None,
                  max_workers: Optional[int] = None,
                  batch_window_s: float = 0.005,
-                 warm_start: bool = True):
+                 warm_start: bool = True,
+                 breaker: Optional[CircuitBreaker] = None,
+                 retry_policy: Optional[RecoveryPolicy] = None):
         self.store = store if store is not None else ScheduleStore()
+        self.guard = StoreGuard(self.store, breaker)
         self.max_workers = max_workers
         self.batch_window_s = batch_window_s
         self.warm_start = warm_start
+        self.retry_policy = retry_policy
         self._queue: Optional[asyncio.Queue] = None
         self._queue_loop = None
         self._stopped_loop = None
@@ -49,6 +70,10 @@ class SolveServer:
         self.coalesced = 0
         self.batches = 0
         self.solved = 0
+        self.degraded = 0
+        self.errors = 0
+        self.batch_faults = 0
+        self.isolated = 0
 
     def _q(self) -> asyncio.Queue:
         # asyncio.Queue binds to the loop it is first awaited on; a server
@@ -64,9 +89,10 @@ class SolveServer:
     # -- client side ---------------------------------------------------------
     async def submit(self, req: SolveRequest) -> ServiceResult:
         """Enqueue one request and await its result.  Duplicate in-flight
-        signatures share one future (and one solve).  Raises if the
-        server's loop on this event loop has already stopped — the
-        request would otherwise never be drained."""
+        signatures share one future (and one solve).  Raises the typed
+        ``ServiceError`` if the request fails terminally, or
+        ``RuntimeError`` if the server's loop on this event loop has
+        already stopped — the request would otherwise never be drained."""
         self.requests += 1
         q = self._q()              # also rebinds in-flight map on new loops
         if self._stopped_loop is asyncio.get_running_loop():
@@ -78,7 +104,7 @@ class SolveServer:
             return await asyncio.shield(fut)
         fut = asyncio.get_running_loop().create_future()
         self._inflight[sig] = fut
-        await q.put((sig, req, fut))
+        await q.put((sig, req, fut, time.perf_counter()))
         try:
             return await asyncio.shield(fut)
         finally:
@@ -114,86 +140,145 @@ class SolveServer:
         while not q.empty():
             item = q.get_nowait()
             if item is not _STOP:
-                _, _, fut = item
+                fut = item[2]
                 if not fut.done():
                     fut.set_exception(RuntimeError("server stopped"))
+
+    def _expired(self, req: SolveRequest, ts: float) -> bool:
+        return req.deadline_s is not None and \
+            time.perf_counter() - ts > req.deadline_s
+
+    async def _isolate(self, sig: str, req: SolveRequest,
+                       fut: asyncio.Future, ts: float) -> None:
+        """Resolve one request independently (the failure-isolation /
+        deadline path): full ladder, typed terminal error."""
+        self.isolated += 1
+        loop = asyncio.get_running_loop()
+        try:
+            res = await loop.run_in_executor(
+                None, lambda: resolve_request(
+                    self.guard, req, sig=sig, policy=self.retry_policy,
+                    max_workers=self.max_workers,
+                    warm_start=self.warm_start, t0=ts))
+        except ServiceError as e:
+            self.errors += 1
+            if not fut.done():
+                fut.set_exception(e)
+        except Exception as e:          # defensive: always a typed error
+            self.errors += 1
+            if not fut.done():
+                fut.set_exception(ServiceError(
+                    f"request {sig[:12]} failed: {e!r}", signature=sig,
+                    reason=repr(e)))
+        else:
+            self.solved += 1
+            self.degraded += bool(res.degraded)
+            if not fut.done():
+                fut.set_result(res)
+        finally:
+            self._inflight.pop(sig, None)
 
     async def _process(self, batch: List[Tuple]) -> None:
         self.batches += 1
         t0 = time.perf_counter()
         loop = asyncio.get_running_loop()
-        misses: List[Tuple[str, SolveRequest, asyncio.Future]] = []
-        for sig, req, fut in batch:
+        misses: List[Tuple[str, SolveRequest, asyncio.Future, float]] = []
+        for sig, req, fut, ts in batch:
             if fut.done():
                 continue
             # store reads parse whole schedule records: keep the disk +
-            # JSON work off the event loop, like the solves below
-            cached = await loop.run_in_executor(None, self.store.get,
+            # JSON work off the event loop, like the solves below.  The
+            # guard swallows store faults (breaker) — a read error is a
+            # miss, not a failed request.
+            cached = await loop.run_in_executor(None, self.guard.get,
                                                 sig, req.graph)
             if cached is not None:
                 fut.set_result(ServiceResult(
-                    cached, sig, "cached", time.perf_counter() - t0))
+                    cached, sig, "cached", time.perf_counter() - ts))
             else:
-                misses.append((sig, req, fut))
+                misses.append((sig, req, fut, ts))
         if not misses:
             return
         by_opts: Dict[Tuple, List[Tuple[str, SolveRequest,
-                                        asyncio.Future]]] = {}
+                                        asyncio.Future, float]]] = {}
         for m in misses:
             by_opts.setdefault(m[1].options, []).append(m)
         for opt_key, group in by_opts.items():
+            # requests already past their deadline skip the pooled solve
+            # and go straight down the ladder (-> greedy floor)
+            pooled = [m for m in group if not self._expired(m[1], m[3])]
+            expired = [m for m in group if self._expired(m[1], m[3])]
+            for sig, req, fut, ts in expired:
+                await self._isolate(sig, req, fut, ts)
+            if not pooled:
+                continue
             ctxs = [await loop.run_in_executor(
-                None, warm_context, self.store, req, sig)
-                if self.warm_start else None for sig, req, _ in group]
+                None, self.guard.warm_context, req, sig)
+                if self.warm_start else None for sig, req, _, _ in pooled]
             seeds = [c[0] if c else None for c in ctxs]
             solvers = [c[1] if c else None for c in ctxs]
             sources = ["warm" if s else "cold" for s in seeds]
-            items = [(req.graph, req.hw) for _, req, _ in group]
+            items = [(req.graph, req.hw) for _, req, _, _ in pooled]
             try:
                 schedules = await loop.run_in_executor(
                     None, lambda: solve_many(
                         items, max_workers=self.max_workers,
                         seed_chains=seeds, layer_solvers=solvers,
                         **dict(opt_key)))
-            except Exception as e:                # pragma: no cover
-                for _, _, fut in group:
-                    if not fut.done():
-                        fut.set_exception(e)
+            except Exception:
+                # per-request failure isolation: one poisoned or faulted
+                # request must not fail the whole coalesced batch — each
+                # member re-resolves independently and only the failing
+                # request's future carries its (typed) error
+                self.batch_faults += 1
+                await asyncio.gather(*(
+                    self._isolate(sig, req, fut, ts)
+                    for sig, req, fut, ts in pooled))
                 continue
-            for (sig, req, fut), sched, src in zip(group, schedules,
-                                                   sources):
+            for (sig, req, fut, ts), sched, src in zip(pooled, schedules,
+                                                       sources):
                 self.solved += 1
                 if src == "warm" and not sched.valid:
                     # seed did not transfer: fall back to a cold solve
-                    sched = await loop.run_in_executor(
-                        None, lambda: solve_many(
-                            [(req.graph, req.hw)],
-                            max_workers=self.max_workers,
-                            **dict(opt_key))[0])
+                    try:
+                        sched = await loop.run_in_executor(
+                            None, lambda: solve_many(
+                                [(req.graph, req.hw)],
+                                max_workers=self.max_workers,
+                                **dict(opt_key))[0])
+                    except Exception:
+                        self.solved -= 1
+                        await self._isolate(sig, req, fut, ts)
+                        continue
                     src = "cold"
                 rec = None
                 if sched.valid:
                     # record serialization + the eviction scan stay off
-                    # the loop too
+                    # the loop too; the guard drops the write if the
+                    # store is broken (solve-without-caching)
                     rec = await loop.run_in_executor(
                         None, lambda s=sched, r=req, g=sig:
-                        self.store.put(s, r.graph, r.hw, r.opts, sig=g))
+                        self.guard.put(s, r.graph, r.hw, r.opts, sig=g))
                 if not fut.done():
                     fut.set_result(ServiceResult(
-                        sched, sig, src, time.perf_counter() - t0, rec))
+                        sched, sig, src, time.perf_counter() - ts, rec))
                 self._inflight.pop(sig, None)
 
     def stats(self) -> Dict:
-        return {**self.store.stats(), "requests": self.requests,
+        return {**self.guard.stats(), "requests": self.requests,
                 "coalesced": self.coalesced, "batches": self.batches,
-                "solved": self.solved,
+                "solved": self.solved, "degraded": self.degraded,
+                "errors": self.errors, "batch_faults": self.batch_faults,
+                "isolated": self.isolated,
                 "inflight": len(self._inflight)}
 
 
 async def serve_batch(server: SolveServer,
                       reqs: List[SolveRequest]) -> List[ServiceResult]:
     """Convenience: run the server loop just long enough to answer one
-    burst of concurrent requests (tests, CLI)."""
+    burst of concurrent requests (tests, CLI).  Raises the first
+    ``ServiceError`` if any request failed terminally — use
+    ``serve_batch_settled`` to collect per-request outcomes instead."""
     loop_task = asyncio.ensure_future(server.serve_forever())
     try:
         results = await asyncio.gather(*(server.submit(r) for r in reqs))
@@ -203,4 +288,19 @@ async def serve_batch(server: SolveServer,
     return list(results)
 
 
-__all__ = ["SolveServer", "serve_batch"]
+async def serve_batch_settled(server: SolveServer,
+                              reqs: List[SolveRequest]) -> List[object]:
+    """Like ``serve_batch`` but never raises for individual requests:
+    each slot is a ``ServiceResult`` or the exception that answered it
+    (liveness: every request gets exactly one of the two)."""
+    loop_task = asyncio.ensure_future(server.serve_forever())
+    try:
+        results = await asyncio.gather(
+            *(server.submit(r) for r in reqs), return_exceptions=True)
+    finally:
+        await server.stop()
+        await loop_task
+    return list(results)
+
+
+__all__ = ["SolveServer", "serve_batch", "serve_batch_settled"]

@@ -1,4 +1,4 @@
-"""Persistent, content-addressed schedule store.
+"""Persistent, content-addressed schedule store — with self-healing.
 
 On-disk layout (sqlite-free, human-inspectable) under one store dir:
 
@@ -6,13 +6,31 @@ On-disk layout (sqlite-free, human-inspectable) under one store dir:
       records/<signature>.json      one versioned record per solve
       index.jsonl                   append-only put log (sig, family,
                                     graph, batch, timestamp)
+      quarantine/<signature>.json   corrupt records, moved aside on read
 
 Records wrap ``NetworkSchedule.to_json`` with the signature, the family
-signature, the normalized solver options, hardware name and the layer
-order, plus an optional ``measured`` block the autotuner fills in when it
-promotes a measured-fastest schedule.  All writes are atomic (temp file +
-``os.replace``; index appends are single short lines), so a killed writer
-never leaves a torn record.
+signature, the normalized solver options, hardware name, the layer
+order, a sha256 ``checksum`` over the record body, plus an optional
+``measured`` block the autotuner fills in when it promotes a
+measured-fastest schedule.  All writes are atomic (temp file +
+``os.replace``; index appends are single short lines), so a killed
+writer never leaves a torn record.
+
+Failure semantics (the resilience contract the service tier builds on):
+
+* a **missing** record is a miss (``None``);
+* a **corrupt** record (unparseable JSON, checksum mismatch, wrong
+  shape) is quarantined to ``<root>/quarantine/`` — never silently
+  re-read — and reads as a miss; ``corrupt``/``quarantined`` counters
+  track it;
+* a **store I/O failure** (disk error, injected fault) raises the typed
+  ``StoreError`` so callers (the server's circuit breaker) can degrade
+  to solve-without-caching instead of crashing;
+* a **damaged index** (torn tail from a killed appender, garbage bytes)
+  is rebuilt from the records dir on open — records are the source of
+  truth, the index is a cache; stale ``*.tmp`` files from killed writers
+  are swept on open.  Killing a ``put`` mid-write therefore always
+  leaves a store that loads clean.
 
 Reads are content-addressed: ``get(signature)`` either misses or returns
 a schedule that re-scores bit-identically to the original solve
@@ -28,6 +46,7 @@ by ``max_entries``; hit/miss/eviction counts are exposed via ``stats()``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import tempfile
@@ -36,12 +55,23 @@ from typing import Dict, List, Mapping, Optional, Sequence
 
 from ..core.solver.kapla import NetworkSchedule
 from ..hw.template import HWTemplate
+from ..runtime import inject
 from ..workloads.layers import LayerGraph
 from .signature import family_signature, schedule_signature, solver_options
 
-STORE_VERSION = 1
+STORE_VERSION = 2
 #: default store dir (overridable per-store or via REPRO_STORE_DIR)
 DEFAULT_ROOT = os.environ.get("REPRO_STORE_DIR", ".repro_store")
+
+
+class StoreError(RuntimeError):
+    """A store I/O failure (not a miss, not corruption): the record may
+    be fine but the store could not be reached.  The server's circuit
+    breaker counts these and degrades to solve-without-caching."""
+
+
+class _Corrupt(ValueError):
+    """Internal: a record that parsed wrongly or failed its checksum."""
 
 
 @dataclasses.dataclass
@@ -61,6 +91,7 @@ class StoreRecord:
     schedule: Dict                      # NetworkSchedule.to_json()
     measured: Optional[Dict] = None     # autotune promotion metadata
     version: int = STORE_VERSION
+    checksum: Optional[str] = None      # sha256 over the body (see below)
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -69,6 +100,14 @@ class StoreRecord:
     def from_json(d: Mapping) -> "StoreRecord":
         known = {f.name for f in dataclasses.fields(StoreRecord)}
         return StoreRecord(**{k: v for k, v in d.items() if k in known})
+
+
+def record_checksum(d: Mapping) -> str:
+    """sha256 over the canonical JSON of the record minus its
+    ``checksum`` field — what ``put`` stamps and reads verify."""
+    body = {k: v for k, v in d.items() if k != "checksum"}
+    return hashlib.sha256(
+        json.dumps(body, sort_keys=True).encode()).hexdigest()
 
 
 def _graph_batch(graph: LayerGraph) -> int:
@@ -97,16 +136,24 @@ class ScheduleStore:
         self.root = root
         self.records_dir = os.path.join(root, "records")
         self.index_path = os.path.join(root, "index.jsonl")
+        self.quarantine_dir = os.path.join(root, "quarantine")
         os.makedirs(self.records_dir, exist_ok=True)
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.warm_hits = 0
+        self.corrupt = 0
+        self.quarantined = 0
+        self.io_errors = 0
+        self.rebuilds = 0
         # family -> [signatures], replayed from the index, filtered to
         # records that still exist (evicted entries drop out naturally)
         self._family: Dict[str, List[str]] = {}
-        self._replay_index()
+        self._sweep_tmp()
+        damaged = self._replay_index()
+        if damaged or (len(self) > 0 and not os.path.exists(self.index_path)):
+            self.rebuild_index()
 
     # -- signatures (convenience passthroughs) -------------------------------
     def signature(self, graph: LayerGraph, hw: HWTemplate,
@@ -132,40 +179,157 @@ class ScheduleStore:
         return sorted(n[:-5] for n in os.listdir(self.records_dir)
                       if n.endswith(".json"))
 
+    # -- crash hygiene -------------------------------------------------------
+    def _sweep_tmp(self) -> None:
+        """Remove temp files a killed writer left behind (``put`` is
+        tmp + ``os.replace``; a crash between the two strands a tmp)."""
+        for d in (self.records_dir, self.root):
+            try:
+                names = os.listdir(d)
+            except OSError:
+                continue
+            for n in names:
+                if n.endswith(".tmp"):
+                    try:
+                        os.unlink(os.path.join(d, n))
+                    except OSError:
+                        pass
+
+    def _quarantine(self, sig: str) -> None:
+        """Move a corrupt record aside (never silently re-read it)."""
+        self.corrupt += 1
+        path = self._rec_path(sig)
+        try:
+            os.makedirs(self.quarantine_dir, exist_ok=True)
+            os.replace(path, os.path.join(self.quarantine_dir,
+                                          f"{sig}.json"))
+            self.quarantined += 1
+        except OSError:
+            # quarantine is best-effort; at worst the next read re-detects
+            pass
+        for fam, sigs in self._family.items():
+            if sig in sigs:
+                self._family[fam] = [s for s in sigs if s != sig]
+
     # -- index ---------------------------------------------------------------
-    def _replay_index(self) -> None:
+    def _replay_index(self) -> int:
+        """Replay ``index.jsonl`` into the family map; returns the number
+        of damaged (undecodable) lines so the caller can rebuild."""
         if not os.path.exists(self.index_path):
-            return
-        with open(self.index_path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    e = json.loads(line)
-                except ValueError:
-                    continue                    # torn tail line: skip
-                if self.has(e.get("sig", "")):
-                    fam = self._family.setdefault(e.get("family", ""), [])
-                    if e["sig"] not in fam:
-                        fam.append(e["sig"])
+            return 0
+        damaged = 0
+        try:
+            with open(self.index_path) as f:
+                lines = f.readlines()
+        except OSError:
+            return 1
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                e = json.loads(line)
+                sig, fam = e["sig"], e["family"]
+            except (ValueError, TypeError, KeyError):
+                damaged += 1                # torn tail or garbage
+                continue
+            if self.has(sig):
+                sigs = self._family.setdefault(fam, [])
+                if sig not in sigs:
+                    sigs.append(sig)
+        return damaged
+
+    def rebuild_index(self) -> int:
+        """Rebuild ``index.jsonl`` and the family map from the records
+        dir — records are the source of truth, the index is a cache.
+        Corrupt records found on the way are quarantined.  Returns the
+        number of indexed records."""
+        self._family = {}
+        entries: List[str] = []
+        for sig in self.signatures():
+            try:
+                rec = self._read_record(sig)
+            except _Corrupt:
+                self._quarantine(sig)
+                continue
+            except StoreError:
+                continue
+            if rec is None:
+                continue
+            entries.append(json.dumps(
+                {"sig": rec.signature, "family": rec.family,
+                 "graph": rec.graph_name, "batch": rec.batch,
+                 "t": rec.created}) + "\n")
+            sigs = self._family.setdefault(rec.family, [])
+            if rec.signature not in sigs:
+                sigs.append(rec.signature)
+        try:
+            _atomic_write(self.index_path, "".join(entries))
+        except OSError as e:
+            raise StoreError(f"index rebuild failed: {e}") from e
+        self.rebuilds += 1
+        return len(entries)
 
     def _index_append(self, entry: Dict) -> None:
-        with open(self.index_path, "a") as f:
-            f.write(json.dumps(entry) + "\n")
+        spec = inject.maybe_fault("store.index", key=entry.get("sig", ""))
+        line = json.dumps(entry) + "\n"
+        if spec is not None and spec.kind == "corrupt":
+            line = line[:max(1, len(line) // 2)]    # torn appender
+        try:
+            with open(self.index_path, "a") as f:
+                f.write(line)
+        except OSError as e:
+            raise StoreError(f"index append failed: {e}") from e
+
+    # -- record I/O ----------------------------------------------------------
+    def _read_record(self, sig: str) -> Optional[StoreRecord]:
+        """Read + verify one record.  None on a miss; ``_Corrupt`` on a
+        damaged record (caller quarantines); ``StoreError`` on I/O
+        failure."""
+        path = self._rec_path(sig)
+        try:
+            spec = inject.maybe_fault("store.read", key=sig)
+        except inject.InjectedFault as e:
+            self.io_errors += 1
+            raise StoreError(str(e)) from e
+        if spec is not None and spec.kind == "corrupt":
+            inject.truncate_file(path)
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except FileNotFoundError:
+            return None
+        except OSError as e:
+            self.io_errors += 1
+            raise StoreError(f"record read failed: {e}") from e
+        except ValueError as e:
+            raise _Corrupt(f"unparseable record {sig[:12]}: {e}") from e
+        try:
+            rec = StoreRecord.from_json(d)
+        except TypeError as e:
+            raise _Corrupt(f"malformed record {sig[:12]}: {e}") from e
+        if rec.checksum is not None and record_checksum(d) != rec.checksum:
+            raise _Corrupt(f"checksum mismatch on {sig[:12]}")
+        return rec
 
     # -- core API ------------------------------------------------------------
     def get_record(self, sig: str) -> Optional[StoreRecord]:
-        path = self._rec_path(sig)
         try:
-            with open(path) as f:
-                rec = StoreRecord.from_json(json.load(f))
-        except (OSError, ValueError, TypeError):
+            rec = self._read_record(sig)
+        except _Corrupt:
+            self._quarantine(sig)
+            self.misses += 1
+            return None
+        if rec is None:
             self.misses += 1
             return None
         self.hits += 1
+        path = self._rec_path(sig)
         now = time.time()
-        os.utime(path, (now, now))              # LRU touch
+        try:
+            os.utime(path, (now, now))          # LRU touch
+        except OSError:
+            pass
         return rec
 
     def get(self, sig: str, graph: Optional[LayerGraph] = None
@@ -207,7 +371,9 @@ class ScheduleStore:
             sig: Optional[str] = None, family: Optional[str] = None,
             measured: Optional[Dict] = None) -> StoreRecord:
         """Insert (or overwrite) the record for one solved schedule;
-        returns the written record.  Invalid schedules are refused."""
+        returns the written record.  Invalid schedules are refused.
+        Raises ``StoreError`` on I/O failure (the record is atomic: it is
+        either fully written or absent)."""
         if not schedule.valid:
             raise ValueError("refusing to store an invalid schedule")
         opts = solver_options(**dict(options or {}))
@@ -222,8 +388,21 @@ class ScheduleStore:
             predicted_latency_cycles=schedule.total_latency_cycles,
             layer_order=[l.name for l in graph.layers],
             schedule=schedule.to_json(), measured=measured)
-        _atomic_write(self._rec_path(sig), json.dumps(rec.to_json(),
-                                                      indent=1))
+        d = rec.to_json()
+        rec.checksum = d["checksum"] = record_checksum(d)
+        try:
+            spec = inject.maybe_fault("store.write", key=sig)
+        except inject.InjectedFault as e:
+            self.io_errors += 1
+            raise StoreError(str(e)) from e
+        path = self._rec_path(sig)
+        try:
+            _atomic_write(path, json.dumps(d, indent=1))
+        except OSError as e:
+            self.io_errors += 1
+            raise StoreError(f"record write failed: {e}") from e
+        if spec is not None and spec.kind == "corrupt":
+            inject.truncate_file(path)          # writer killed mid-put
         self._index_append({"sig": sig, "family": family,
                             "graph": graph.name, "batch": rec.batch,
                             "t": rec.created})
@@ -237,16 +416,20 @@ class ScheduleStore:
     def warm_records(self, family: str, exclude: Sequence[str] = ()
                      ) -> List[StoreRecord]:
         """Records in the same graph family (same layers/hardware/options,
-        different batch), newest first — warm-start seeds."""
+        different batch), newest first — warm-start seeds.  Corrupt
+        records encountered on the way are quarantined and skipped;
+        I/O failures raise ``StoreError``."""
         out: List[StoreRecord] = []
-        for sig in reversed(self._family.get(family, [])):
+        for sig in list(reversed(self._family.get(family, []))):
             if sig in exclude or not self.has(sig):
                 continue
             try:
-                with open(self._rec_path(sig)) as f:
-                    out.append(StoreRecord.from_json(json.load(f)))
-            except (OSError, ValueError, TypeError):
+                rec = self._read_record(sig)
+            except _Corrupt:
+                self._quarantine(sig)
                 continue
+            if rec is not None:
+                out.append(rec)
         if out:
             self.warm_hits += 1
         return out
@@ -274,7 +457,10 @@ class ScheduleStore:
         return {"root": self.root, "entries": len(self),
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "warm_hits": self.warm_hits,
+                "corrupt": self.corrupt, "quarantined": self.quarantined,
+                "io_errors": self.io_errors, "rebuilds": self.rebuilds,
                 "families": sum(1 for v in self._family.values() if v)}
 
 
-__all__ = ["ScheduleStore", "StoreRecord", "STORE_VERSION", "DEFAULT_ROOT"]
+__all__ = ["ScheduleStore", "StoreRecord", "StoreError", "record_checksum",
+           "STORE_VERSION", "DEFAULT_ROOT"]

@@ -1,0 +1,340 @@
+"""Chaos suite: liveness, bounded latency, graceful degradation and
+store self-healing invariants under seeded fault schedules
+(``repro.runtime.inject``)."""
+import asyncio
+import json
+import os
+import time
+
+import pytest
+
+from repro.core.solver import solve
+from repro.hw.presets import eyeriss_multinode
+from repro.runtime.fault import CircuitBreaker, RecoveryPolicy
+from repro.runtime.inject import (FaultInjector, FaultPlan, FaultSpec,
+                                  InjectedFault, inject)
+from repro.service import (LocalClient, ScheduleStore, ServiceError,
+                           ServiceResult, SolveRequest, SolveServer,
+                           serve_batch_settled)
+from repro.workloads.nets import get_net
+
+HW = eyeriss_multinode()
+#: zero-backoff retries: chaos tests should not sleep
+FAST = RecoveryPolicy(max_retries=3, backoff_seconds=0.0, max_backoff=0.0)
+
+
+def _plan(seed=7, **sites):
+    return FaultPlan.make(seed, sites)
+
+
+# ---------------------------------------------------------------------------
+# injector determinism
+# ---------------------------------------------------------------------------
+
+def test_injector_schedule_is_deterministic():
+    plan = _plan(seed=42, **{"store.read": FaultSpec(rate=0.5)})
+    keys = [f"k{i % 5}" for i in range(40)]
+    runs = []
+    for _ in range(2):
+        inj = FaultInjector(plan)
+        fired = []
+        for k in keys:
+            fired.append(inj.decide("store.read", k) is not None)
+        runs.append(fired)
+    assert runs[0] == runs[1]
+    assert any(runs[0]) and not all(runs[0])    # rate 0.5 really mixes
+    # decisions are keyed, not sequenced: reversing call order must not
+    # change any per-(key, occurrence) outcome
+    inj = FaultInjector(plan)
+    rev = {}
+    for k in reversed(keys):
+        n = sum(1 for kk in rev if kk[0] == k)
+        rev[(k, n)] = inj.decide("store.read", k) is not None
+    fwd = {}
+    for i, (k, f) in enumerate(zip(keys, runs[0])):
+        n = sum(1 for j in range(i) if keys[j] == k)
+        fwd[(k, n)] = f
+    assert fwd == rev
+
+
+def test_injector_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan.make(0, {"bogus.site": FaultSpec(rate=0.1)})
+    with pytest.raises(ValueError):
+        FaultSpec(rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(rate=0.1, kind="explode")
+
+
+# ---------------------------------------------------------------------------
+# liveness under the acceptance fault schedule
+# ---------------------------------------------------------------------------
+
+def test_server_liveness_under_store_faults_and_slow_solves(tmp_path):
+    """Every request gets a result or a typed error — zero hangs — under
+    injected store faults + slow solves; degraded answers are flagged."""
+    plan = _plan(
+        seed=1234,
+        **{"store.read": FaultSpec(rate=0.3, kind="error"),
+           "store.write": FaultSpec(rate=0.3, kind="error"),
+           "solve.segment": FaultSpec(rate=0.2, kind="slow",
+                                      delay_s=0.002)})
+    server = SolveServer(ScheduleStore(str(tmp_path)),
+                         retry_policy=FAST, batch_window_s=0.001)
+    reqs = []
+    for i in range(12):
+        name, batch = [("mlp", 8), ("mlp", 16), ("lstm", 8)][i % 3]
+        reqs.append(SolveRequest.make(get_net(name, batch=batch), HW))
+
+    async def run():
+        return await asyncio.wait_for(
+            serve_batch_settled(server, reqs), timeout=120)
+
+    with inject(plan) as inj:
+        out = asyncio.run(run())
+    assert len(out) == len(reqs)
+    for r in out:
+        assert isinstance(r, (ServiceResult, ServiceError)), r
+        if isinstance(r, ServiceResult):
+            assert r.schedule.valid
+            assert r.degraded == (r.source == "greedy")
+    assert inj.fired                    # the schedule really injected
+    st = server.stats()
+    assert st["requests"] == len(reqs)
+    assert st["inflight"] == 0          # liveness: nothing stranded
+
+
+def test_typed_error_when_every_solve_faults(tmp_path):
+    """rate-1.0 solve faults exhaust the whole ladder: the answer is the
+    typed ServiceError, never a raw InjectedFault or a hang."""
+    plan = _plan(**{"solve.segment": FaultSpec(rate=1.0, kind="error")})
+    client = LocalClient(ScheduleStore(str(tmp_path)), retry_policy=FAST)
+    with inject(plan):
+        with pytest.raises(ServiceError) as ei:
+            client.solve(get_net("mlp", batch=8), HW)
+    assert "InjectedFault" in ei.value.reason
+    assert ei.value.attempts >= 1
+    # after the chaos clears, the same client answers normally
+    res = client.solve(get_net("mlp", batch=8), HW)
+    assert res.source == "cold" and res.schedule.valid
+
+
+def test_transient_solve_fault_is_retried(tmp_path):
+    """A sub-1.0 fault rate means a retry draws fresh randomness: the
+    request lands without degradation well within the retry budget."""
+    plan = _plan(seed=3,
+                 **{"solve.segment": FaultSpec(rate=0.15, kind="error")})
+    client = LocalClient(ScheduleStore(str(tmp_path)),
+                         retry_policy=RecoveryPolicy(
+                             max_retries=8, backoff_seconds=0.0,
+                             max_backoff=0.0))
+    with inject(plan) as inj:
+        res = client.solve(get_net("mlp", batch=8), HW)
+    assert res.schedule.valid
+    assert inj.fired.get("solve.segment", 0) >= 0   # schedule-dependent
+    assert res.source in ("cold", "warm", "greedy")
+
+
+# ---------------------------------------------------------------------------
+# deadlines + degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_expired_deadline_degrades_to_greedy(tmp_path):
+    client = LocalClient(ScheduleStore(str(tmp_path)))
+    res = client.solve(get_net("mlp", batch=8), HW, deadline_s=0.0)
+    assert res.source == "greedy" and res.degraded
+    assert res.schedule.valid
+    assert res.error is None            # deadline, not a fault
+    # the greedy answer is NOT cached: a later relaxed request gets the
+    # real solve
+    res2 = client.solve(get_net("mlp", batch=8), HW)
+    assert res2.source in ("cold", "warm")
+    assert res2.schedule.total_energy_pj <= res.schedule.total_energy_pj
+
+
+def test_server_deadline_degrades_to_greedy(tmp_path):
+    server = SolveServer(ScheduleStore(str(tmp_path)), retry_policy=FAST,
+                         batch_window_s=0.05)
+    reqs = [SolveRequest.make(get_net("mlp", batch=8), HW),
+            SolveRequest.make(get_net("mlp", batch=16), HW,
+                              deadline_s=1e-4)]
+    out = asyncio.run(serve_batch_settled(server, reqs))
+    ok = [r for r in out if isinstance(r, ServiceResult)]
+    assert len(ok) == 2
+    by_sig = {r.signature: r for r in ok}
+    relaxed = by_sig[reqs[0].signature()]
+    rushed = by_sig[reqs[1].signature()]
+    assert not relaxed.degraded
+    assert rushed.source == "greedy" and rushed.degraded
+    assert server.stats()["degraded"] == 1
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker: broken store -> solve-without-caching
+# ---------------------------------------------------------------------------
+
+def test_breaker_degrades_to_solve_without_caching(tmp_path):
+    plan = _plan(**{"store.read": FaultSpec(rate=1.0, kind="error"),
+                    "store.write": FaultSpec(rate=1.0, kind="error")})
+    client = LocalClient(
+        ScheduleStore(str(tmp_path)), warm_start=False,
+        breaker=CircuitBreaker(threshold=2, cooldown_s=60.0),
+        retry_policy=FAST)
+    with inject(plan):
+        for name in ("mlp", "lstm", "mlp"):
+            res = client.solve(get_net(name, batch=8), HW)
+            assert res.schedule.valid           # served despite the store
+            assert res.source == "cold"
+            assert res.record is None           # nothing cached
+    st = client.stats()
+    assert st["store_errors"] >= 2
+    assert st["breaker"]["state"] == "open"
+    assert st["store_skipped"] >= 1             # open breaker skips I/O
+    assert st["entries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# store self-healing
+# ---------------------------------------------------------------------------
+
+def _put_one(root, name="mlp", batch=8):
+    store = ScheduleStore(root)
+    net = get_net(name, batch=batch)
+    rec = store.put(solve(net, HW), net, HW)
+    return store, rec
+
+
+def test_corrupt_record_is_quarantined_and_recovers(tmp_path):
+    store, rec = _put_one(str(tmp_path))
+    path = store._rec_path(rec.signature)
+    with open(path, "w") as f:
+        f.write("{ this is not json")
+    assert store.get(rec.signature) is None
+    st = store.stats()
+    assert st["corrupt"] == 1 and st["quarantined"] == 1
+    assert os.path.exists(os.path.join(store.quarantine_dir,
+                                       f"{rec.signature}.json"))
+    assert not store.has(rec.signature)
+    # the service transparently re-solves and re-populates
+    client = LocalClient(store)
+    res = client.solve(get_net("mlp", batch=8), HW)
+    assert res.source == "cold" and store.has(rec.signature)
+    assert store.get(rec.signature) is not None
+
+
+def test_checksum_catches_silent_bitflip(tmp_path):
+    store, rec = _put_one(str(tmp_path))
+    path = store._rec_path(rec.signature)
+    with open(path) as f:
+        d = json.load(f)
+    d["predicted_energy_pj"] = d["predicted_energy_pj"] + 1.0
+    with open(path, "w") as f:
+        json.dump(d, f)                 # valid JSON, wrong bytes
+    assert store.get(rec.signature) is None
+    assert store.stats()["corrupt"] == 1
+
+
+def test_damaged_index_rebuilds_from_records(tmp_path):
+    store, rec = _put_one(str(tmp_path), "mlp", 8)
+    net16 = get_net("mlp", batch=16)
+    store.put(solve(net16, HW), net16, HW)
+    with open(store.index_path, "w") as f:
+        f.write('{"sig": "torn-and-inval\x00')    # garbage index
+    store2 = ScheduleStore(str(tmp_path))
+    assert store2.stats()["rebuilds"] == 1
+    assert len(store2) == 2
+    fam = store2.family(get_net("mlp", batch=8), HW)
+    assert len(store2.warm_records(fam)) == 2
+    # rebuilt index parses clean end-to-end
+    with open(store2.index_path) as f:
+        assert all(json.loads(l) for l in f if l.strip())
+
+
+def test_crash_mid_put_leaves_loadable_store(tmp_path):
+    """A writer killed mid-put (torn record + torn index tail + strewn
+    tmp file) must leave a store that loads clean and self-heals."""
+    root = str(tmp_path)
+    store, rec = _put_one(root, "mlp", 8)
+    plan = _plan(**{"store.write": FaultSpec(rate=1.0, kind="corrupt"),
+                    "store.index": FaultSpec(rate=1.0, kind="corrupt")})
+    net = get_net("mlp", batch=16)
+    with inject(plan):
+        store.put(solve(net, HW), net, HW)      # torn on disk
+    with open(os.path.join(store.records_dir, "killed.tmp"), "w") as f:
+        f.write("partial")
+    store2 = ScheduleStore(root)                # must not raise
+    assert not [n for n in os.listdir(store2.records_dir)
+                if n.endswith(".tmp")]
+    # torn index line triggered a rebuild, which quarantined the torn
+    # record; the healthy record survived intact
+    assert store2.stats()["rebuilds"] == 1
+    assert store2.get(rec.signature) is not None
+    assert len(store2) == 1
+    assert store2.stats()["quarantined"] == 1
+
+
+def test_cli_repair_rebuilds(tmp_path, capsys):
+    from repro.service.__main__ import main
+    root = str(tmp_path / "store")
+    store, rec = _put_one(root)
+    with open(store.index_path, "a") as f:
+        f.write("not json\n")
+    assert main(["repair", "--store-dir", root]) == 0
+    out = capsys.readouterr().out
+    assert "rebuilt index: 1 records" in out
+
+
+# ---------------------------------------------------------------------------
+# autotune hardening
+# ---------------------------------------------------------------------------
+
+def _autotune(tmp_path, plan=None, timeout=None, k=2):
+    from repro.lower.calibrate import default_hw
+    from repro.service import autotune_network
+    store = ScheduleStore(str(tmp_path))
+    net = get_net("mlp", batch=2)
+    if plan is None:
+        return autotune_network(net, default_hw(), store=store, k=k,
+                                iters=1, candidate_timeout_s=timeout)
+    with inject(plan):
+        return autotune_network(net, default_hw(), store=store, k=k,
+                                iters=1, candidate_timeout_s=timeout)
+
+
+def test_autotune_disqualifies_nan_candidates(tmp_path):
+    plan = _plan(**{"autotune.measure": FaultSpec(rate=1.0, kind="nan")})
+    report = _autotune(tmp_path, plan)
+    assert report["n_executed"] == 0
+    assert report["skipped"]
+    assert all("non-finite" in s["reason"] for s in report["skipped"])
+    assert "promoted" not in report or not report["promoted"]
+
+
+def test_autotune_disqualifies_crashing_candidates(tmp_path):
+    plan = _plan(**{"autotune.measure": FaultSpec(rate=1.0,
+                                                  kind="error")})
+    report = _autotune(tmp_path, plan)
+    assert report["n_executed"] == 0
+    assert all("InjectedFault" in s["reason"] for s in report["skipped"])
+
+
+def test_autotune_disqualifies_hung_candidates(tmp_path):
+    plan = _plan(**{"autotune.measure": FaultSpec(rate=1.0, kind="slow",
+                                                  delay_s=1.0)})
+    t0 = time.perf_counter()
+    report = _autotune(tmp_path, plan, timeout=0.05, k=1)
+    assert report["n_executed"] == 0
+    assert all("timeout" in s["reason"] for s in report["skipped"])
+
+
+def test_autotune_partial_fault_still_promotes(tmp_path):
+    """Faults on one candidate must not abort the others: with a ~50%
+    crash schedule the survivors still execute and promote."""
+    plan = _plan(seed=11, **{"autotune.measure": FaultSpec(rate=0.5,
+                                                           kind="error")})
+    report = _autotune(tmp_path, plan, k=3)
+    assert report["n_candidates"] >= 1
+    assert report["n_executed"] + len(report["skipped"]) \
+        == report["n_candidates"]
+    if report["n_executed"]:
+        assert report.get("promoted") is True

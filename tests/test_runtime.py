@@ -104,3 +104,99 @@ def test_backup_dispatcher_prefers_fast_backup():
         return "fast"
     assert bd.run(slow, fast) == "fast"
     bd.close()
+
+
+def test_recovery_default_policy_is_fresh_per_call():
+    import inspect
+    # a dataclass default instance in the signature would be shared
+    # (mutable default): the default must be None, constructed per call
+    assert inspect.signature(run_with_recovery) \
+        .parameters["policy"].default is None
+    done = []
+    stats = run_with_recovery(lambda i: done.append(i), 0, 2, lambda: 0,
+                              sleep=lambda s: None)
+    assert stats.restarts == 0 and done == [0, 1]
+
+
+def test_backup_dispatcher_failover_when_primary_raises():
+    with BackupDispatcher(deadline_seconds=0.5) as bd:
+        def bad():
+            raise ValueError("primary died")
+        assert bd.run(bad, lambda: "backup") == "backup"
+        assert bd.failovers == 1
+
+
+def test_backup_dispatcher_ignores_raising_backup():
+    with BackupDispatcher(deadline_seconds=0.01) as bd:
+        def slow_ok():
+            time.sleep(0.1)
+            return "primary"
+        def bad():
+            raise ValueError("backup died")
+        assert bd.run(slow_ok, bad) == "primary"
+        assert bd.failovers == 0
+
+
+def test_backup_dispatcher_both_raise_surfaces_primary_error():
+    class PrimaryErr(Exception):
+        pass
+    with BackupDispatcher(deadline_seconds=0.01) as bd:
+        def p():
+            time.sleep(0.05)
+            raise PrimaryErr("p")
+        def b():
+            raise ValueError("b")
+        with pytest.raises(PrimaryErr):
+            bd.run(p, b)
+
+
+def test_backup_dispatcher_run_with_queued_backup():
+    # one worker: the deadline-launched backup queues behind the still-
+    # running primary; the primary's win is returned either way
+    with BackupDispatcher(deadline_seconds=0.01, workers=1) as bd:
+        def slow_ok():
+            time.sleep(0.05)
+            return "primary"
+        assert bd.run(slow_ok, lambda: "backup") == "primary"
+
+
+def test_backup_dispatcher_cancels_unstarted_loser():
+    import threading
+    # pin the single worker so the loser stays queued (cancellable):
+    # cancellation must land before the winner's result is returned
+    with BackupDispatcher(deadline_seconds=0.01, workers=1) as bd:
+        blocker = threading.Event()
+        bd.pool.submit(blocker.wait)
+        winner = bd.pool.submit(lambda: "w")
+        loser = bd.pool.submit(lambda: "l")
+        threading.Timer(0.02, blocker.set).start()
+        assert bd._finish(winner, loser) == "w"
+        assert bd.cancelled_losers == 1
+        assert loser.cancelled()
+
+
+def test_circuit_breaker_state_machine():
+    from repro.runtime.fault import CircuitBreaker
+    t = {"now": 0.0}
+    br = CircuitBreaker(threshold=2, cooldown_s=10.0,
+                        clock=lambda: t["now"])
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "closed"             # below threshold
+    br.record_success()
+    br.record_failure()
+    assert br.state == "closed"             # success reset the streak
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    t["now"] = 11.0                         # past the cooldown
+    assert br.state == "half-open"
+    assert br.allow()                       # the single probe
+    assert not br.allow()                   # no second probe
+    br.record_failure()                     # probe failed: re-open
+    assert br.state == "open" and not br.allow()
+    t["now"] = 22.0
+    assert br.allow()
+    br.record_success()                     # probe succeeded: closed
+    assert br.state == "closed" and br.allow()
+    assert br.stats()["opens"] == 1         # re-open is not a new open
+    assert br.stats()["consecutive_failures"] == 0

@@ -323,3 +323,75 @@ def test_cli_solve_get_stats(tmp_path, capsys):
     assert json.loads(capsys.readouterr().out)["entries"] == 2
     assert main(["get", "--net", "mlp", "--batch", "4",
                  "--store-dir", root]) == 1
+
+
+# ---------------------------------------------------------------------------
+# resilience satellites
+# ---------------------------------------------------------------------------
+
+def test_server_isolates_poisoned_request_in_batch(tmp_path, monkeypatch):
+    """Regression: an exception inside a coalesced batch solve must fail
+    only the poisoned request — its neighbour still gets a result."""
+    import repro.service.client as client_mod
+    import repro.service.server as server_mod
+    from repro.service import ServiceError, serve_batch_settled
+
+    real_solve = client_mod.solve
+    real_greedy = client_mod.solve_greedy
+
+    def boom_many(*a, **k):
+        raise ValueError("batch poisoned")
+
+    def picky_solve(graph, hw, **k):
+        if graph.name == "poison":
+            raise ValueError("poisoned request")
+        return real_solve(graph, hw, **k)
+
+    def picky_greedy(graph, hw, **k):
+        if graph.name == "poison":
+            raise ValueError("poisoned request")
+        return real_greedy(graph, hw, **k)
+
+    monkeypatch.setattr(server_mod, "solve_many", boom_many)
+    monkeypatch.setattr(client_mod, "solve", picky_solve)
+    monkeypatch.setattr(client_mod, "solve_greedy", picky_greedy)
+
+    poison = LayerGraph("poison", get_net("mlp", batch=16).layers)
+    server = SolveServer(ScheduleStore(str(tmp_path)),
+                         batch_window_s=0.05)
+    reqs = [SolveRequest.make(get_net("mlp", batch=8), HW),
+            SolveRequest.make(poison, HW)]
+    ok, err = asyncio.run(serve_batch_settled(server, reqs))
+    assert ok.schedule.valid and not ok.degraded
+    assert isinstance(err, ServiceError)
+    assert err.signature == reqs[1].signature()
+    assert "poisoned" in err.reason
+    st = server.stats()
+    assert st["batch_faults"] >= 1
+    assert st["isolated"] == 2 and st["errors"] == 1
+    assert st["inflight"] == 0
+
+
+def test_stats_surface_resilience_counters(tmp_path):
+    store = ScheduleStore(str(tmp_path))
+    for k in ("corrupt", "quarantined", "io_errors", "rebuilds"):
+        assert store.stats()[k] == 0
+    for st in (LocalClient(store).stats(), SolveServer(store).stats()):
+        for k in ("corrupt", "quarantined", "degraded", "errors",
+                  "store_errors", "store_skipped", "breaker"):
+            assert k in st
+    assert "batch_faults" in SolveServer(store).stats()
+
+
+def test_cli_stats_and_repair_surface_resilience(tmp_path, capsys):
+    from repro.service.__main__ import main
+    root = str(tmp_path / "store")
+    assert main(["solve", "--net", "mlp", "--batch", "8",
+                 "--store-dir", root]) == 0
+    capsys.readouterr()
+    assert main(["stats", "--store-dir", root]) == 0
+    st = json.loads(capsys.readouterr().out)
+    for k in ("corrupt", "quarantined", "io_errors", "rebuilds"):
+        assert st[k] == 0
+    assert main(["repair", "--store-dir", root]) == 0
+    assert "rebuilt index: 1 records" in capsys.readouterr().out
