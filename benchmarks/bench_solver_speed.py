@@ -398,6 +398,142 @@ def bench_chaos(quick: bool) -> dict:
         shutil.rmtree(root, ignore_errors=True)
 
 
+def bench_multinode(quick: bool) -> dict:
+    """Elastic multi-node chaos bench (the acceptance workload): solve +
+    lower mlp once, partition the segment chain across a 4-node mesh
+    (``multinode.plan_multinode``), then serve a burst of requests through
+    the resilient ``MeshExecutor`` twice — fault-free, and with one node
+    killed mid-run plus another slowed 5x (seeded ``runtime.inject``
+    schedule).  Availability is the fraction of chaos requests that
+    completed; non-degraded results must be bit-identical to the
+    fault-free run; re-partitions must re-solve only the dirty segments
+    (count reported).  Full record -> BENCH_multinode.json."""
+    import dataclasses
+    import hashlib
+    from concurrent.futures import ThreadPoolExecutor
+
+    import numpy as np
+
+    from repro.core.solver.multinode import NodeMesh, plan_multinode
+    from repro.lower.calibrate import default_hw, save_record
+    from repro.lower.meshexec import MeshExecutor, build_segment_tasks
+    from repro.lower.netexec import make_network_inputs
+    from repro.runtime.inject import FaultPlan, FaultSpec, inject
+
+    hw = default_hw()
+    n_nodes = 4
+    n_requests = 6 if quick else 16
+    net = get_net("mlp", batch=4)
+    memo.clear_all()
+    t0 = time.perf_counter()
+    sched = solve(net, hw, max_seg_len=2)
+    solve_s = time.perf_counter() - t0
+    assert sched.valid
+    nplan = sched.lower(net, hw)
+    t0 = time.perf_counter()
+    plan = plan_multinode(sched, net, hw, NodeMesh(nodes=n_nodes))
+    plan_s = time.perf_counter() - t0
+    base = make_network_inputs(nplan, seed=0)
+    weights = {k: v for k, v in base.items() if k.endswith(".W")}
+    ext = [{k: np.asarray(v)
+            for k, v in make_network_inputs(nplan, seed=i).items()
+            if k.endswith(".I")} for i in range(n_requests)]
+    tasks = build_segment_tasks(nplan, weights)
+
+    def digest(outputs) -> str:
+        h = hashlib.sha256()
+        for k in sorted(outputs):
+            h.update(k.encode())
+            h.update(np.ascontiguousarray(outputs[k]).tobytes())
+        return h.hexdigest()
+
+    def serve(faults=None):
+        """One burst through a fresh executor; returns per-request
+        (digest, seconds, degraded) plus the executor's stats."""
+        with MeshExecutor(plan, tasks, schedule=sched, graph=net,
+                          hw=hw) as ex:
+            def one(i):
+                t0 = time.perf_counter()
+                try:
+                    r = ex.run(ext[i], f"req{i}")
+                except Exception as e:      # an unanswered request counts
+                    return None, time.perf_counter() - t0, repr(e)
+                return digest(r.outputs), \
+                    time.perf_counter() - t0, r.degraded
+            if faults is not None:
+                with inject(faults) as inj:
+                    with ThreadPoolExecutor(max_workers=2) as tp:
+                        rows = list(tp.map(one, range(n_requests)))
+                fired = inj.summary()
+            else:
+                with ThreadPoolExecutor(max_workers=2) as tp:
+                    rows = list(tp.map(one, range(n_requests)))
+                fired = {}
+            return rows, ex.stats(), fired
+
+    # fault-free reference (also the bit-identity oracle)
+    t0 = time.perf_counter()
+    ref_rows, ref_stats, _ = serve()
+    ref_wall = time.perf_counter() - t0
+    assert not any(d for _, _, d in ref_rows)
+
+    # chaos: the crashed node's 3rd task kills it permanently; a second
+    # node (a surviving replica) runs everything 5x slow
+    victim = plan.parts[0].node_ids[0]
+    slow = next((n for p in plan.parts for n in p.node_ids
+                 if n != victim), (victim + 1) % n_nodes)
+    specs = {
+        "node.crash": FaultSpec(rate=1.0, kind="error",
+                                match=f"node{victim}", after=2),
+        "node.slow": FaultSpec(rate=1.0, kind="slow",
+                               match=f"node{slow}", factor=5.0),
+    }
+    faults = FaultPlan.make(20260808, specs)
+    t0 = time.perf_counter()
+    rows, stats, fired = serve(faults)
+    wall = time.perf_counter() - t0
+
+    done = [(h, s, d) for h, s, d in rows if h is not None]
+    lat = [s for _, s, _ in done]
+    n_done = len(done)
+    n_degraded = sum(1 for h, _, d in rows if h is not None and d)
+    identical = all(h == rh for (h, _, d), (rh, _, _)
+                    in zip(rows, ref_rows) if h is not None and not d)
+    record = {
+        "net": "mlp/b4",
+        "n_nodes": n_nodes,
+        "n_segments": plan.n_segments,
+        "n_requests": n_requests,
+        "availability": n_done / n_requests,
+        "n_degraded": n_degraded,
+        "bit_identical_non_degraded": identical,
+        "p50_seconds": _pct(lat, 0.50),
+        "p99_seconds": _pct(lat, 0.99),
+        "baseline_p50_seconds": _pct([s for _, s, _ in ref_rows], 0.50),
+        "recovery_seconds": stats["recovery_seconds"],
+        "repartitions": stats["repartitions"],
+        "resolved_segments": stats["resolved_segments"],
+        "failures": stats["failures"],
+        "replays": stats["replays"],
+        "backups": stats["backups"],
+        "alive_nodes": stats["alive_nodes"],
+        "single_node_fallback": stats["fallback"],
+        "solve_seconds": solve_s,
+        "plan_seconds": plan_s,
+        "plan": plan.to_json(),
+        "wall_seconds": wall,
+        "baseline_wall_seconds": ref_wall,
+        "fault_plan": {"seed": faults.seed,
+                       "specs": {s: dataclasses.asdict(sp)
+                                 for s, sp in specs.items()}},
+        "injected": fired,
+        "errors": [d for h, _, d in rows if h is None],
+        "baseline_stats": ref_stats,
+    }
+    save_record(record, os.path.join(REPO_ROOT, "BENCH_multinode.json"))
+    return record
+
+
 def bench_calibration(quick: bool) -> dict:
     """Solver -> lowering -> pallas execution -> measured-vs-predicted
     calibration sweep (repro.lower.calibrate).  The full per-pair record is
@@ -492,9 +628,23 @@ def main(argv=None) -> int:
     ap.add_argument("--min-chaos-degraded-paths", type=int, default=None,
                     help="exit nonzero if fewer distinct degradation "
                     "paths were exercised than this")
+    ap.add_argument("--multinode", action="store_true",
+                    help="also run the multi-node chaos sweep: node kill "
+                    "+ 5x slowdown mid-serve (writes BENCH_multinode.json)")
+    ap.add_argument("--multinode-only", action="store_true",
+                    help="run ONLY the multi-node chaos sweep (the CI "
+                    "multi-node smoke gate)")
+    ap.add_argument("--min-multinode-availability", type=float,
+                    default=None,
+                    help="exit nonzero if the fraction of requests "
+                    "completed under node kill/slowdown is below this")
+    ap.add_argument("--require-multinode-identical", action="store_true",
+                    help="exit nonzero unless every non-degraded chaos "
+                    "request's outputs are bit-identical to the "
+                    "fault-free run")
     args = ap.parse_args(argv)
     only = args.calibrate_only or args.network_only or args.service_only \
-        or args.chaos_only
+        or args.chaos_only or args.multinode_only
     if only and (args.min_speedup is not None
                  or args.min_interlayer_speedup is not None
                  or args.max_transformer_seconds is not None):
@@ -517,6 +667,9 @@ def main(argv=None) -> int:
     elif args.chaos_only:
         record = {"quick": args.quick,
                   "chaos": bench_chaos(args.quick)}
+    elif args.multinode_only:
+        record = {"quick": args.quick,
+                  "multinode": bench_multinode(args.quick)}
     else:
         record = {
             "quick": args.quick,
@@ -534,6 +687,8 @@ def main(argv=None) -> int:
             record["service"] = bench_service(args.quick)
         if args.chaos:
             record["chaos"] = bench_chaos(args.quick)
+        if args.multinode:
+            record["multinode"] = bench_multinode(args.quick)
     text = json.dumps(record, indent=2)
     print(text)
     # BENCH_solver.json at the repo root is the perf-trajectory record
@@ -636,6 +791,23 @@ def main(argv=None) -> int:
             fails.append(f"chaos exercised {ch['paths_exercised']} "
                          f"degradation paths < "
                          f"{args.min_chaos_degraded_paths}")
+    mn = record.get("multinode")
+    if args.min_multinode_availability is not None:
+        if mn is None:
+            fails.append("multi-node availability gate set but sweep did "
+                         "not run (pass --multinode)")
+        elif mn["availability"] < args.min_multinode_availability:
+            fails.append(
+                f"multi-node availability {mn['availability']:.3f} < "
+                f"{args.min_multinode_availability} "
+                f"(errors: {mn['errors']})")
+    if args.require_multinode_identical:
+        if mn is None:
+            fails.append("multi-node bit-identity gate set but sweep did "
+                         "not run (pass --multinode)")
+        elif not mn["bit_identical_non_degraded"]:
+            fails.append("multi-node chaos outputs diverged from the "
+                         "fault-free run on non-degraded requests")
     if only:
         for f_ in fails:
             print("FAIL:", f_, file=sys.stderr)

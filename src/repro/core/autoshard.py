@@ -244,7 +244,8 @@ def plan_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh,
             cache_b = sum(
                 _sharded_bytes(l.shape, l.dtype,
                                _cache_spec(_path_names(p), l.shape, cfg, tp,
-                                           dp_axes, shape), mesh_shape)
+                                           dp_axes, shape, mesh_shape),
+                               mesh_shape)
                 for p, l in
                 jax.tree_util.tree_flatten_with_path(cache_shapes)[0])
         hbm = pb + ob + grad_b + act_b + cache_b
@@ -320,7 +321,8 @@ def plan_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh,
     if cache_shapes is not None:
         cache_specs = jax.tree_util.tree_map_with_path(
             lambda p, l: _cache_spec(_path_names(p), l.shape, cfg, tp,
-                                     dp_axes, shape), cache_shapes)
+                                     dp_axes, shape, mesh_shape),
+            cache_shapes)
 
     return ShardingPlan(cfg.name, shape.name, param_specs, opt_specs,
                         batch_specs, cache_specs, zero, attn_sharded,
@@ -329,10 +331,8 @@ def plan_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
 def _cache_spec(names: Tuple[str, ...], shape_t: Tuple[int, ...],
                 cfg: ModelConfig, tp: int, dp_axes: Tuple[str, ...],
-                shape: ShapeConfig) -> P:
-    dp_size = 1
-    for a in dp_axes:
-        dp_size *= {"pod": 2, "data": 16}.get(a, 16)
+                shape: ShapeConfig, mesh_shape: Dict[str, int]) -> P:
+    dp_size = math.prod(mesh_shape[a] for a in dp_axes) if dp_axes else 1
     name = names[-1]
     B = shape.global_batch
     dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)

@@ -110,6 +110,17 @@ class ElasticPlanner:
         data = 2 ** int(math.log2(groups))
         return data, self.model_axis
 
+    def plan_nodes(self, surviving_nodes: int) -> int:
+        """Node-mesh variant of ``plan``: segment-chain parts tolerate
+        any node count (no collective trees to balance), so every
+        survivor stays in service — but below ``min_data`` nodes the
+        mesh cannot serve at all and the caller must fall back."""
+        if surviving_nodes < self.min_data:
+            raise NodeFailure(
+                f"only {surviving_nodes} node(s) left; mesh needs at "
+                f"least {self.min_data}", permanent=True)
+        return surviving_nodes
+
     def batch_for(self, global_batch: int, data_axis: int,
                   old_data_axis: int) -> int:
         """Rescale the global batch proportionally (keeps per-replica

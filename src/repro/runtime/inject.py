@@ -16,6 +16,17 @@ Sites instrumented in the production code:
     store.index       index.jsonl appends         (kinds: error, corrupt)
     solve.segment     kapla.solve_segment         (kinds: error, slow)
     autotune.measure  autotune candidate runs     (kinds: error, slow, nan)
+    node.crash        meshexec worker nodes       (kinds: error -> the node
+                      dies permanently, NodeFailure)
+    node.hang         meshexec worker nodes       (kinds: slow -> the task
+                      blocks ``delay_s``, tripping the hang deadline)
+    node.slow         meshexec worker nodes       (kinds: slow -> the task
+                      stretches to ``factor`` x its real runtime)
+
+Node-site keys are ``"node<id>"``, so ``FaultSpec.match`` pins a fault
+to one node and ``FaultSpec.after`` fires it only from occurrence
+``after`` on — together they script "kill node 1 on its 3rd task"
+deterministically.
 
 ``corrupt`` on reads truncates the on-disk record *before* the read, so
 the store's real checksum/quarantine machinery is exercised, not mocked;
@@ -41,7 +52,8 @@ from typing import Dict, List, Mapping, Optional, Tuple
 
 #: sites the production code instruments (``FaultPlan`` rejects others)
 SITES = ("store.read", "store.write", "store.index",
-         "solve.segment", "autotune.measure")
+         "solve.segment", "autotune.measure",
+         "node.crash", "node.hang", "node.slow")
 
 KINDS = ("error", "corrupt", "slow", "nan")
 
@@ -61,11 +73,27 @@ class InjectedFault(RuntimeError):
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """One site's fault behaviour: ``rate`` is the per-occurrence fault
-    probability; ``delay_s`` is the sleep for ``slow`` faults."""
+    probability; ``delay_s`` is the sleep for ``slow`` faults.
+
+    Scripting filters (both deterministic, for chaos scenarios that
+    target a specific victim at a specific point):
+
+    * ``match``  — fault only keys starting with this prefix (e.g.
+      ``"node1"``); non-matching keys still advance their occurrence
+      counters, so the schedule for other keys is unchanged;
+    * ``after``  — fault only from occurrence ``after`` on (0-based:
+      ``after=2`` spares the first two occurrences);
+    * ``factor`` — multiplicative slowdown for sites that implement
+      proportional ``slow`` faults (``node.slow`` stretches a task to
+      ``factor`` x its measured runtime; 0 means site default).
+    """
 
     rate: float
     kind: str = "error"
     delay_s: float = 0.0
+    after: int = 0
+    match: str = ""
+    factor: float = 0.0
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -73,6 +101,10 @@ class FaultSpec:
                              f"one of {KINDS}")
         if not 0.0 <= self.rate <= 1.0:
             raise ValueError(f"rate {self.rate} outside [0, 1]")
+        if self.after < 0:
+            raise ValueError(f"after {self.after} must be >= 0")
+        if self.factor < 0:
+            raise ValueError(f"factor {self.factor} must be >= 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +154,10 @@ class FaultInjector:
             n = self._counts.get((site, key), 0)
             self._counts[(site, key)] = n + 1
         if spec is None or spec.rate <= 0.0:
+            return None
+        if spec.match and not key.startswith(spec.match):
+            return None
+        if n < spec.after:
             return None
         rng = random.Random(f"{self.plan.seed}:{site}:{key}:{n}")
         if rng.random() >= spec.rate:

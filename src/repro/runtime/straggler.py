@@ -49,6 +49,18 @@ class StragglerDetector:
                 if self._count.get(h, 0) >= self.warmup
                 and v > self.factor * med]
 
+    def forget(self, host: str) -> None:
+        """Drop a drained/replaced host's history so its (typically
+        inflated) EWMA stops poisoning the fleet median."""
+        self._ewma.pop(host, None)
+        self._count.pop(host, None)
+
+    def stats(self) -> Dict:
+        return {"hosts": dict(self._ewma),
+                "counts": dict(self._count),
+                "fleet_median": self.fleet_median(),
+                "stragglers": self.stragglers()}
+
 
 class BackupDispatcher:
     """Speculative duplicate execution with a deadline.

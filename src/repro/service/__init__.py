@@ -31,7 +31,8 @@ that *keeps* its winners and serves them to many concurrent clients:
 from .signature import family_signature, schedule_signature, solver_options
 from .store import ScheduleStore, StoreError, StoreRecord
 from .client import (LocalClient, ServiceError, ServiceResult,
-                     SolveRequest, StoreGuard, resolve_request)
+                     SolveRequest, StoreGuard, attach_mesh_plan,
+                     resolve_request)
 from .server import SolveServer, serve_batch, serve_batch_settled
 from .autotune import autotune_network
 
@@ -39,7 +40,7 @@ __all__ = [
     "family_signature", "schedule_signature", "solver_options",
     "ScheduleStore", "StoreError", "StoreRecord",
     "LocalClient", "ServiceError", "ServiceResult", "SolveRequest",
-    "StoreGuard", "resolve_request",
+    "StoreGuard", "attach_mesh_plan", "resolve_request",
     "SolveServer", "serve_batch", "serve_batch_settled",
     "autotune_network",
 ]

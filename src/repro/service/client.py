@@ -61,20 +61,25 @@ class SolveRequest:
     overrides (k_s, max_seg_len, objective).  ``deadline_s`` (never part
     of the signature) bounds the service time budget: a request past its
     deadline degrades to the greedy floor instead of queueing a full
-    solve."""
+    solve.  ``nodes`` (also outside the signature — the single-node
+    schedule is the shared, cacheable artifact) asks for a multi-node
+    placement of the answer: the result carries a ``MultiNodePlan`` or,
+    if partitioning fails, falls back one ladder rung to single-node,
+    flagged degraded."""
 
     graph: LayerGraph
     hw: HWTemplate
     options: Tuple[Tuple[str, object], ...] = ()
     deadline_s: Optional[float] = None
+    nodes: int = 1
 
     @staticmethod
     def make(graph: LayerGraph, hw: HWTemplate,
-             deadline_s: Optional[float] = None, **options
-             ) -> "SolveRequest":
+             deadline_s: Optional[float] = None, nodes: int = 1,
+             **options) -> "SolveRequest":
         opts = solver_options(**options)
         return SolveRequest(graph, hw, tuple(sorted(opts.items())),
-                            deadline_s)
+                            deadline_s, nodes)
 
     @property
     def opts(self) -> Dict:
@@ -103,6 +108,42 @@ class ServiceResult:
     record: Optional[StoreRecord] = None
     degraded: bool = False
     error: Optional[str] = None
+    #: multi-node placement (``multinode.MultiNodePlan``) when the
+    #: request asked for ``nodes > 1`` and partitioning succeeded
+    mesh_plan: Optional[object] = None
+    nodes: int = 1
+
+
+def attach_mesh_plan(res: ServiceResult,
+                     req: SolveRequest) -> ServiceResult:
+    """The service's multi-node rung: a request with ``nodes > 1`` gets
+    a ``MultiNodePlan`` attached to its result (the cached/solved
+    single-node schedule is reused — only the placement is computed).
+    A failed partition falls back one rung to single-node, flagged
+    ``degraded`` with the fault recorded — never a failed request.
+
+    Never mutates ``res``: decoration happens on a copy.  Coalesced
+    requests *share* one undecorated result (``nodes`` is outside the
+    signature), so each awaiter decorates its own view — a ``nodes=1``
+    request coalesced onto a ``nodes=4`` solve must not see the other
+    request's placement, and vice versa."""
+    if res.schedule is None or not res.schedule.valid:
+        return res
+    if req.nodes <= 1:
+        if res.mesh_plan is None and res.nodes == 1:
+            return res
+        return dataclasses.replace(res, mesh_plan=None, nodes=1)
+    from ..core.solver import multinode
+    try:
+        plan = multinode.plan_multinode(
+            res.schedule, req.graph, req.hw,
+            multinode.NodeMesh(nodes=req.nodes))
+        return dataclasses.replace(res, mesh_plan=plan, nodes=req.nodes)
+    except Exception as e:
+        err = res.error if res.error is not None else \
+            f"multi-node partition failed ({e!r}); single-node fallback"
+        return dataclasses.replace(res, mesh_plan=None, nodes=1,
+                                   degraded=True, error=err)
 
 
 class StoreGuard:
@@ -176,7 +217,8 @@ def resolve_request(guard: StoreGuard, req: SolveRequest,
                     max_workers: Optional[int] = None,
                     warm_start: bool = True,
                     t0: Optional[float] = None,
-                    sleep=time.sleep) -> ServiceResult:
+                    sleep=time.sleep,
+                    attach_mesh: bool = True) -> ServiceResult:
     """Answer one request down the degradation ladder.
 
     cached -> warm -> cold (with bounded-backoff retries on transient
@@ -184,19 +226,25 @@ def resolve_request(guard: StoreGuard, req: SolveRequest,
     request's submit time (``time.perf_counter`` clock) — deadlines are
     measured from submission, so queue time counts against the budget.
     Raises ``ServiceError`` when even the greedy floor fails.
+
+    ``attach_mesh=False`` skips the multi-node rung — callers whose
+    result may be *shared* across coalesced requests (the async server)
+    keep it undecorated and attach per awaiter instead.
     """
     t0 = time.perf_counter() if t0 is None else t0
     sig = sig if sig is not None else req.signature()
     policy = policy if policy is not None else DEFAULT_RETRY_POLICY
     deadline_at = None if req.deadline_s is None else t0 + req.deadline_s
+    decorate = attach_mesh_plan if attach_mesh else (lambda r, _: r)
 
     def expired() -> bool:
         return deadline_at is not None and time.perf_counter() > deadline_at
 
     cached = guard.get(sig, req.graph)
     if cached is not None:
-        return ServiceResult(cached, sig, "cached",
-                             time.perf_counter() - t0)
+        return decorate(
+            ServiceResult(cached, sig, "cached",
+                          time.perf_counter() - t0), req)
 
     attempts = 0
     backoff = policy.backoff_seconds
@@ -221,8 +269,9 @@ def resolve_request(guard: StoreGuard, req: SolveRequest,
                               **req.opts)
             rec = guard.put(sched, req.graph, req.hw, req.opts, sig=sig) \
                 if sched.valid else None
-            return ServiceResult(sched, sig, src,
-                                 time.perf_counter() - t0, rec)
+            return decorate(
+                ServiceResult(sched, sig, src,
+                              time.perf_counter() - t0, rec), req)
         except TRANSIENT_ERRORS as e:
             last_err = e
             if attempts > policy.max_retries or expired():
@@ -238,10 +287,10 @@ def resolve_request(guard: StoreGuard, req: SolveRequest,
         sched = solve_greedy(req.graph, req.hw, max_workers=max_workers,
                              **req.opts)
         if sched.valid:
-            return ServiceResult(
+            return decorate(ServiceResult(
                 sched, sig, "greedy", time.perf_counter() - t0,
                 degraded=True,
-                error=None if last_err is None else repr(last_err))
+                error=None if last_err is None else repr(last_err)), req)
         if last_err is None:
             # nothing faulted — the request has no feasible schedule at
             # all; answer with the invalid schedule like a plain solve
@@ -280,10 +329,10 @@ class LocalClient:
 
     # -- single request ------------------------------------------------------
     def solve(self, graph: LayerGraph, hw: HWTemplate,
-              deadline_s: Optional[float] = None,
+              deadline_s: Optional[float] = None, nodes: int = 1,
               **options) -> ServiceResult:
         req = SolveRequest.make(graph, hw, deadline_s=deadline_s,
-                                **options)
+                                nodes=nodes, **options)
         return self.solve_request(req)
 
     def solve_request(self, req: SolveRequest) -> ServiceResult:
@@ -319,8 +368,8 @@ class LocalClient:
                 continue
             cached = self.guard.get(sig, req.graph)
             if cached is not None:
-                results[sig] = ServiceResult(cached, sig, "cached",
-                                             time.perf_counter() - t0)
+                results[sig] = ServiceResult(
+                    cached, sig, "cached", time.perf_counter() - t0)
             else:
                 miss_set.add(sig)
                 miss_sigs.append(sig)
@@ -368,16 +417,23 @@ class LocalClient:
                         if sched.valid else None
                     results[sig] = ServiceResult(
                         sched, sig, src, time.perf_counter() - t0, rec)
-        return [results[sig] for sig in sigs]
+        # deduped signatures share one undecorated result; the mesh rung
+        # is per *request* (nodes is outside the signature), so each
+        # request decorates its own view here
+        return [attach_mesh_plan(results[sig], req)
+                for sig, req in zip(sigs, reqs)]
 
     # -- helpers -------------------------------------------------------------
     def _isolated(self, req: SolveRequest, sig: str,
                   t0: float) -> ServiceResult:
         try:
+            # shared by signature in the batch results: keep undecorated
+            # (the mesh rung runs per request at the end of solve_batch)
             res = resolve_request(self.guard, req, sig=sig,
                                   policy=self.retry_policy,
                                   max_workers=self.max_workers,
-                                  warm_start=self.warm_start, t0=t0)
+                                  warm_start=self.warm_start, t0=t0,
+                                  attach_mesh=False)
         except ServiceError as e:
             self.errors += 1
             from ..core.solver.kapla import _invalid_schedule
@@ -399,4 +455,4 @@ class LocalClient:
 
 __all__ = ["SolveRequest", "ServiceResult", "ServiceError", "StoreGuard",
            "LocalClient", "warm_context", "resolve_request",
-           "TRANSIENT_ERRORS", "DEFAULT_RETRY_POLICY"]
+           "attach_mesh_plan", "TRANSIENT_ERRORS", "DEFAULT_RETRY_POLICY"]

@@ -41,7 +41,7 @@ from typing import Dict, List, Optional, Tuple
 from ..core.solver.kapla import solve_many
 from ..runtime.fault import CircuitBreaker, RecoveryPolicy
 from .client import (ServiceError, ServiceResult, SolveRequest, StoreGuard,
-                     resolve_request)
+                     attach_mesh_plan, resolve_request)
 from .store import ScheduleStore
 
 _STOP = object()
@@ -101,15 +101,28 @@ class SolveServer:
         fut = self._inflight.get(sig)
         if fut is not None:
             self.coalesced += 1
-            return await asyncio.shield(fut)
+            return await self._decorated(fut, req)
         fut = asyncio.get_running_loop().create_future()
         self._inflight[sig] = fut
         await q.put((sig, req, fut, time.perf_counter()))
         try:
-            return await asyncio.shield(fut)
+            return await self._decorated(fut, req)
         finally:
             if self._inflight.get(sig) is fut and fut.done():
                 self._inflight.pop(sig, None)
+
+    async def _decorated(self, fut: asyncio.Future,
+                         req: SolveRequest) -> ServiceResult:
+        """Await the (possibly shared) in-flight future and apply the
+        per-request multi-node rung.  Coalesced requests share one
+        *undecorated* result — ``nodes`` is outside the signature — so
+        each awaiter attaches (or strips) its own placement on a copy;
+        the plan solve is CPU work and stays off the event loop."""
+        res = await asyncio.shield(fut)
+        if req.nodes > 1:
+            res = await asyncio.get_running_loop().run_in_executor(
+                None, attach_mesh_plan, res, req)
+        return res
 
     async def stop(self) -> None:
         await self._q().put(_STOP)
@@ -159,7 +172,8 @@ class SolveServer:
                 None, lambda: resolve_request(
                     self.guard, req, sig=sig, policy=self.retry_policy,
                     max_workers=self.max_workers,
-                    warm_start=self.warm_start, t0=ts))
+                    warm_start=self.warm_start, t0=ts,
+                    attach_mesh=False))   # shared future: per-awaiter
         except ServiceError as e:
             self.errors += 1
             if not fut.done():
@@ -193,6 +207,9 @@ class SolveServer:
             cached = await loop.run_in_executor(None, self.guard.get,
                                                 sig, req.graph)
             if cached is not None:
+                # undecorated: the future may be shared by coalesced
+                # requests with different node counts — each awaiter
+                # attaches its own placement (``submit``)
                 fut.set_result(ServiceResult(
                     cached, sig, "cached", time.perf_counter() - ts))
             else:

@@ -110,3 +110,22 @@ def test_plan_notes_record_candidates():
     assert len(plan.notes) >= 2           # >1 candidate was considered
     assert any("zero=True" in n for n in plan.notes)
     assert any("zero=False" in n for n in plan.notes)
+
+
+def test_cache_spec_uses_real_mesh_shape():
+    # regression: _cache_spec once hardcoded {"pod": 2, "data": 16} for
+    # the dp axis sizes and ignored the caller's mesh — on a smaller
+    # data axis the decode cache lost its batch sharding (batch >= the
+    # REAL dp size) and gained a bogus "data" sequence shard instead
+    from repro.configs.base import ShapeConfig
+    cfg = get_config("gemma2-2b")
+    shape = ShapeConfig("decode_small", 1024, 8, "decode")
+    mesh = FakeMesh({"data": 4, "model": 16})
+    api = build_model(cfg)
+    param_sds = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    cache_sds = jax.eval_shape(lambda: api.init_cache(8, 1024))
+    plan = plan_sharding(cfg, shape, mesh, param_sds, {},
+                         cache_shapes=cache_sds)
+    k_spec = tuple(plan.cache_specs["k"])
+    assert k_spec[1] == "data", k_spec     # batch 8 >= dp_size 4
+    assert "data" not in k_spec[2:], k_spec

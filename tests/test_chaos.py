@@ -18,6 +18,8 @@ from repro.service import (LocalClient, ScheduleStore, ServiceError,
                            serve_batch_settled)
 from repro.workloads.nets import get_net
 
+pytestmark = pytest.mark.chaos
+
 HW = eyeriss_multinode()
 #: zero-backoff retries: chaos tests should not sleep
 FAST = RecoveryPolicy(max_retries=3, backoff_seconds=0.0, max_backoff=0.0)

@@ -1,0 +1,489 @@
+"""Multi-node tier: mesh partitioning, the resilient mesh executor, the
+node-level fault sites and the service's ``nodes=N`` path."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.solver import solve
+from repro.core.solver.kapla import NetworkSchedule
+from repro.core.solver.multinode import (MultiNodePlan, NodeAssignment,
+                                         NodeMesh, cross_segment_bytes,
+                                         plan_multinode, repartition,
+                                         segment_costs)
+from repro.lower.calibrate import default_hw
+from repro.lower.meshexec import (MeshExecutor, NodePool, SegmentTask,
+                                  build_segment_tasks)
+from repro.lower.netexec import execute_network, make_network_inputs
+from repro.runtime.fault import ElasticPlanner, NodeFailure
+from repro.runtime.inject import (SITES, FaultInjector, FaultPlan,
+                                  FaultSpec, inject)
+from repro.runtime.straggler import StragglerDetector
+from repro.workloads.nets import get_net
+
+HW = default_hw()
+
+
+@pytest.fixture(scope="module")
+def solved():
+    net = get_net("mlp", batch=4)
+    sched = solve(net, HW, max_seg_len=2)
+    assert sched.valid
+    return net, sched
+
+
+@pytest.fixture(scope="module")
+def solved_b3():
+    net = get_net("mlp", batch=3)
+    sched = solve(net, HW, max_seg_len=1)
+    assert sched.valid
+    return net, sched
+
+
+# ---------------------------------------------------------------------------
+# the mesh + solver tier
+# ---------------------------------------------------------------------------
+
+def test_mesh_hops_by_topology():
+    ring = NodeMesh(nodes=6, topology="ring")
+    assert ring.hops(0, 0) == 0
+    assert ring.hops(0, 5) == 1            # wraps around
+    assert ring.hops(0, 3) == 3
+    chain = NodeMesh(nodes=6, topology="chain")
+    assert chain.hops(0, 5) == 5
+    full = NodeMesh(nodes=6, topology="full")
+    assert full.hops(0, 5) == 1
+    with pytest.raises(ValueError):
+        NodeMesh(nodes=0)
+    with pytest.raises(ValueError):
+        NodeMesh(topology="torus")
+
+
+def test_plan_covers_chain_contiguously(solved):
+    net, sched = solved
+    mesh = NodeMesh(nodes=4)
+    plan = plan_multinode(sched, net, HW, mesh)
+    S = len(sched.chain.segments)
+    assert plan.n_segments == S
+    covered = []
+    for p in plan.parts:
+        covered.extend(range(p.seg_start, p.seg_stop))
+        assert p.node_ids and all(0 <= n < 4 for n in p.node_ids)
+    assert covered == list(range(S))       # contiguous, complete
+    assert plan.nodes_used <= mesh.nodes
+    assert plan.prune.total >= plan.prune.after_validity > 0
+    for s in range(S):
+        assert plan.part_of_segment(s).seg_start <= s
+    with pytest.raises(KeyError):
+        plan.part_of_segment(S)
+
+
+def test_replicate_width_divides_batch(solved_b3):
+    net, sched = solved_b3
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    for p in plan.parts:
+        assert 3 % p.width == 0            # batch 3: widths in {1, 3}
+    # invalid widths were enumerated but pruned by validity
+    assert plan.prune.after_validity < plan.prune.total
+
+
+def test_link_bandwidth_and_hops_are_cost_terms(solved_b3):
+    net, sched = solved_b3
+    fat = plan_multinode(sched, net, HW,
+                         NodeMesh(nodes=4, link_bandwidth_bytes_per_cycle=1e9))
+    thin = plan_multinode(sched, net, HW,
+                          NodeMesh(nodes=4,
+                                   link_bandwidth_bytes_per_cycle=1e-3))
+    # same partitioning question, slower links: never a better answer
+    assert thin.est_cost >= fat.est_cost
+    # with free links the pipeline splits across nodes
+    assert len(fat.parts) > 1
+    # the thin plan either collapses parts or pays visible link cycles
+    assert len(thin.parts) < len(fat.parts) \
+        or any(p.link_cycles > 0 for p in thin.parts)
+    ranges = [(c.start, c.stop) for c in segment_costs(sched, net)]
+    flows = cross_segment_bytes(net, ranges)
+    assert flows                            # mlp chains segment to segment
+    assert all(b > 0 for b in flows.values())
+
+
+def test_objectives(solved):
+    net, sched = solved
+    lat = plan_multinode(sched, net, HW, NodeMesh(nodes=4),
+                         objective="latency")
+    thr = plan_multinode(sched, net, HW, NodeMesh(nodes=4),
+                         objective="throughput")
+    assert lat.latency_cycles <= thr.latency_cycles + 1e-9
+    assert thr.bottleneck_cycles <= lat.bottleneck_cycles + 1e-9
+    with pytest.raises(ValueError):
+        plan_multinode(sched, net, HW, objective="speed")
+
+
+def test_plan_without_chain_uses_singleton_segments(solved):
+    import dataclasses
+    net, sched = solved
+    # schedules without a chain (e.g. greedy per-layer answers) fall back
+    # to one segment per layer (netplan's rule, mirrored so indices align)
+    bare = dataclasses.replace(sched, chain=None)
+    plan = plan_multinode(bare, net, HW, NodeMesh(nodes=4))
+    assert plan.n_segments == len(net.layers)
+
+
+def test_plan_to_json(solved):
+    net, sched = solved
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    d = plan.to_json()
+    assert d["mesh"]["nodes"] == 4
+    assert len(d["parts"]) == len(plan.parts)
+    assert d["nodes_used"] == plan.nodes_used
+
+
+def test_repartition_is_incremental(solved_b3):
+    net, sched = solved_b3
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    assert len(plan.parts) > 1
+    victim_part = plan.parts[-1]
+    victim = victim_part.node_ids[0]
+    survivors = [n for n in range(4) if n != victim]
+    new_plan, dirty = repartition(plan, sched, net, HW, survivors)
+    # only the victim's segments are dirty
+    assert dirty == list(range(victim_part.seg_start,
+                               victim_part.seg_stop))
+    # untouched parts keep their node assignments verbatim
+    for old, new in zip(plan.parts, new_plan.parts):
+        if victim not in old.node_ids:
+            assert new.node_ids == old.node_ids
+        else:
+            assert victim not in new.node_ids
+            assert set(new.node_ids) <= set(survivors)
+    assert new_plan.n_segments == plan.n_segments
+
+
+def test_repartition_no_survivors_raises(solved):
+    net, sched = solved
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    with pytest.raises(NodeFailure) as ei:
+        repartition(plan, sched, net, HW, survivors=[])
+    assert ei.value.permanent
+    with pytest.raises(ValueError):
+        repartition(plan, sched, net, HW, survivors=[7])
+
+
+# ---------------------------------------------------------------------------
+# node-level fault sites
+# ---------------------------------------------------------------------------
+
+def test_node_sites_registered():
+    for site in ("node.crash", "node.hang", "node.slow"):
+        assert site in SITES
+        FaultPlan.make(0, {site: FaultSpec(rate=1.0)})   # accepted
+
+
+def test_fault_spec_after_and_match_are_deterministic():
+    plan = FaultPlan.make(3, {"node.crash": FaultSpec(rate=1.0, after=2,
+                                                      match="node1")})
+    inj = FaultInjector(plan)
+    got = [(key, inj.decide("node.crash", key) is not None)
+           for key in ["node0", "node1", "node1", "node0", "node1",
+                       "node1"]]
+    # node0 never matches; node1 spared until occurrence 2 (0-based)
+    assert got == [("node0", False), ("node1", False), ("node1", False),
+                   ("node0", False), ("node1", True), ("node1", True)]
+    # same plan, same schedule (replayable)
+    inj2 = FaultInjector(plan)
+    assert [inj2.decide("node.crash", k) is not None
+            for k, _ in got] == [f for _, f in got]
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(rate=1.0, after=-1)
+    with pytest.raises(ValueError):
+        FaultSpec(rate=1.0, factor=-0.5)
+    s = FaultSpec(rate=1.0, kind="slow", factor=5.0, match="node2")
+    assert s.factor == 5.0
+
+
+# ---------------------------------------------------------------------------
+# the resilient executor (synthetic tasks: fast, no jax)
+# ---------------------------------------------------------------------------
+
+def synth_plan(parts_spec, nodes=4):
+    parts = []
+    seg = 0
+    for pi, (nseg, node_ids) in enumerate(parts_spec):
+        parts.append(NodeAssignment(
+            part=pi, seg_start=seg, seg_stop=seg + nseg,
+            node_ids=tuple(node_ids), compute_cycles=100.0, energy_pj=1.0,
+            inbound_bytes=0.0, inbound_hops=0, link_cycles=0.0,
+            onchip_staged=True))
+        seg += nseg
+    return MultiNodePlan(
+        graph_name="synth", mesh=NodeMesh(nodes=nodes),
+        parts=tuple(parts), bottleneck_cycles=100.0, latency_cycles=100.0,
+        total_energy_pj=1.0, link_bytes=0.0, est_cost=100.0)
+
+
+def synth_tasks(n, log=None, seconds=0.0):
+    tasks = []
+    for i in range(n):
+        def run(state, i=i):
+            if log is not None:
+                log.append((i, threading.current_thread().name))
+            if seconds:
+                time.sleep(seconds)
+            return {f"t{i}": np.asarray(state.get(f"t{i-1}", 0) + i + 1)}
+        tasks.append(SegmentTask(i, (f"t{i-1}",) if i else (),
+                                 (f"t{i}",), run))
+    return tasks
+
+
+def test_executor_fault_free_runs_on_assigned_nodes():
+    log = []
+    plan = synth_plan([(1, (0,)), (1, (1,)), (1, (2,))])
+    with MeshExecutor(plan, synth_tasks(3, log)) as ex:
+        r = ex.run({}, "r0")
+    assert int(r.outputs["t2"]) == 1 + 2 + 3
+    assert not r.degraded and r.replays == 0 and r.backups == 0
+    threads = {i: t for i, t in log}
+    assert threads[0].startswith("node0")
+    assert threads[1].startswith("node1")
+    assert threads[2].startswith("node2")
+
+
+def test_executor_replicated_part_round_robins_requests():
+    log = []
+    plan = synth_plan([(2, (0, 1, 2, 3))])
+    with MeshExecutor(plan, synth_tasks(2, log)) as ex:
+        for i in range(4):
+            ex.run({}, f"r{i}")
+    # each request sticks to one replica; requests spread across the group
+    assert len({t.split("_")[0] for _, t in log}) > 1
+
+
+def test_executor_dead_assignment_falls_back_without_context():
+    # no schedule/graph/hw: the repartition rung is unavailable, so a
+    # lost node drops straight to the single-node fallback — degraded,
+    # but the request still completes with correct outputs
+    plan = synth_plan([(1, (0,)), (1, (1,))])
+    with MeshExecutor(plan, synth_tasks(2)) as ex:
+        ex.pool.kill(1, "test")
+        r = ex.run({}, "r0")
+    assert int(r.outputs["t1"]) == 3
+    assert r.degraded and ex.fallback
+    assert ex.stats()["degraded_requests"] == 1
+
+
+@pytest.mark.chaos
+def test_executor_repartitions_on_injected_crash(solved):
+    net, sched = solved
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    victim = plan.parts[0].node_ids[0]
+    S = plan.n_segments
+    faults = FaultPlan.make(1, {"node.crash": FaultSpec(
+        rate=1.0, match=f"node{victim}")})
+    with MeshExecutor(plan, synth_tasks(S), schedule=sched, graph=net,
+                      hw=HW) as ex:
+        with inject(faults) as inj:
+            r = ex.run({}, "r0")
+        assert int(r.outputs[f"t{S-1}"]) == sum(range(1, S + 1))
+        assert not r.degraded              # survivors absorbed the loss
+        assert r.replays >= 1              # replayed from the boundary
+        st = ex.stats()
+        assert st["failures"] >= 1
+        assert st["repartitions"] >= 1
+        assert st["resolved_segments"] >= 1
+        assert victim not in st["alive_nodes"]
+        # the drained node's straggler history was forgotten
+        assert f"node{victim}" not in st["straggler"]["hosts"]
+        assert inj.fired.get("node.crash", 0) >= 1
+        # repartitioned plan no longer references the dead node
+        assert all(victim not in p.node_ids for p in ex.plan.parts)
+
+
+@pytest.mark.chaos
+def test_executor_hang_drains_node(solved):
+    net, sched = solved
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    victim = plan.parts[0].node_ids[0]
+    S = plan.n_segments
+    faults = FaultPlan.make(1, {"node.hang": FaultSpec(
+        rate=1.0, kind="slow", delay_s=5.0, match=f"node{victim}")})
+    with MeshExecutor(plan, synth_tasks(S), schedule=sched, graph=net,
+                      hw=HW, task_timeout_s=0.3) as ex:
+        with inject(faults):
+            r = ex.run({}, "r0")
+    assert int(r.outputs[f"t{S-1}"]) == sum(range(1, S + 1))
+    assert not r.degraded
+    assert ex.pool.is_dead(victim)         # hung -> drained
+    assert ex.stats()["repartitions"] >= 1
+
+
+def test_executor_straggler_feeds_backup_dispatch():
+    plan = synth_plan([(1, (0,)), (1, (1,))])
+    slow = {"nid": 1}
+
+    def run(state, _slow=slow):
+        if threading.current_thread().name.startswith(
+                f"node{_slow['nid']}"):
+            time.sleep(0.4)
+        return {"t1": np.asarray(7)}
+
+    tasks = [synth_tasks(1)[0],
+             SegmentTask(1, ("t0",), ("t1",), run)]
+    det = StragglerDetector(factor=1.5, warmup=1)
+    for _ in range(3):
+        det.record("node1", 0.5)           # node1 is already notorious
+        det.record("node0", 0.01)
+    with MeshExecutor(plan, tasks, detector=det,
+                      min_backup_deadline_s=0.05) as ex:
+        r = ex.run({}, "r0")
+    assert int(r.outputs["t1"]) == 7
+    assert r.backups >= 1                  # the healthy peer won the race
+    assert not r.degraded
+    assert not ex.pool.is_dead(1)          # slow, not dead: never killed
+
+
+@pytest.mark.chaos
+def test_executor_all_nodes_lost_single_node_fallback(solved):
+    net, sched = solved
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    S = plan.n_segments
+    faults = FaultPlan.make(1, {"node.crash": FaultSpec(rate=1.0)})
+    planner = ElasticPlanner(model_axis=1, min_data=2)
+    with MeshExecutor(plan, synth_tasks(S), schedule=sched, graph=net,
+                      hw=HW, planner=planner) as ex:
+        with inject(faults):               # every dispatch crashes a node
+            r = ex.run({}, "r0")
+    assert int(r.outputs[f"t{S-1}"]) == sum(range(1, S + 1))
+    assert r.degraded and ex.fallback      # below min_nodes: last rung
+    assert ex.stats()["recovery_seconds"] >= 0.0
+
+
+def test_node_pool_contract():
+    with NodePool(2) as pool:
+        assert pool.alive() == [0, 1]
+        fut = pool.submit(0, lambda: 42)
+        assert fut.result() == 42
+        pool.kill(0, "test")
+        pool.kill(0, "again")              # idempotent
+        assert pool.alive() == [1]
+        with pytest.raises(NodeFailure) as ei:
+            pool.submit(0, lambda: 0)
+        assert ei.value.permanent
+        pool.set_slow(1, 3.0)
+        assert pool.slow_factor(1) == 3.0
+    with pytest.raises(ValueError):
+        NodePool(0)
+
+
+# ---------------------------------------------------------------------------
+# jax-backed integration: bit-identical under node churn
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lowered(solved):
+    net, sched = solved
+    nplan = sched.lower(net, HW)
+    inputs = make_network_inputs(nplan, seed=0)
+    weights = {k: v for k, v in inputs.items() if k.endswith(".W")}
+    ext = {k: np.asarray(v) for k, v in inputs.items()
+           if k.endswith(".I")}
+    tasks = build_segment_tasks(nplan, weights)
+    return nplan, inputs, weights, ext, tasks
+
+
+def test_segment_tasks_match_network_execution(lowered, solved):
+    net, sched = solved
+    nplan, inputs, _, ext, tasks = lowered
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    with MeshExecutor(plan, tasks, schedule=sched, graph=net,
+                      hw=HW) as ex:
+        r = ex.run(ext, "r0")
+    ref = execute_network(nplan, inputs)
+    assert r.outputs
+    for k, v in r.outputs.items():
+        assert np.array_equal(v, np.asarray(ref.outputs[k])), k
+
+
+@pytest.mark.chaos
+def test_mesh_chaos_kill_keeps_results_bit_identical(lowered, solved):
+    net, sched = solved
+    nplan, _, _, ext, tasks = lowered
+    plan0 = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    with MeshExecutor(plan0, tasks, schedule=sched, graph=net,
+                      hw=HW) as ex:
+        baseline = {k: np.asarray(v)
+                    for k, v in ex.run(ext, "r0").outputs.items()}
+    victim = plan0.parts[0].node_ids[0]
+    faults = FaultPlan.make(5, {"node.crash": FaultSpec(
+        rate=1.0, match=f"node{victim}", after=1)})
+    plan1 = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    with MeshExecutor(plan1, tasks, schedule=sched, graph=net,
+                      hw=HW) as ex:
+        with inject(faults):
+            runs = [ex.run(ext, f"r{i}") for i in range(4)]
+        st = ex.stats()
+    assert all(not r.degraded for r in runs)
+    for r in runs:                         # availability + bit-identity
+        for k, v in r.outputs.items():
+            assert np.array_equal(np.asarray(v), baseline[k]), k
+    assert st["failures"] >= 1
+    assert st["repartitions"] >= 1
+    # incremental: the re-partition re-placed at most the whole chain
+    assert 1 <= st["resolved_segments"] <= st["repartitions"] * len(tasks)
+
+
+# ---------------------------------------------------------------------------
+# the service's nodes=N path
+# ---------------------------------------------------------------------------
+
+def test_local_client_nodes_path(tmp_path, solved):
+    from repro.service import LocalClient, ScheduleStore
+    net, _ = solved
+    client = LocalClient(ScheduleStore(tmp_path / "store"))
+    res = client.solve(net, HW, nodes=4, max_seg_len=2)
+    assert res.mesh_plan is not None
+    assert res.nodes == 4
+    assert not res.degraded
+    assert res.mesh_plan.nodes_used <= 4
+    # the signature is node-count-agnostic: a single-node request hits
+    # the cache the multi-node request populated
+    res1 = client.solve(net, HW, nodes=1, max_seg_len=2)
+    assert res1.source == "cached" and res1.mesh_plan is None
+    # and a cached multi-node answer still gets its placement attached
+    res4 = client.solve(net, HW, nodes=4, max_seg_len=2)
+    assert res4.source == "cached" and res4.mesh_plan is not None
+
+
+def test_nodes_path_falls_back_single_node_degraded(tmp_path, solved,
+                                                    monkeypatch):
+    import repro.core.solver.multinode as mn
+    from repro.service import LocalClient, ScheduleStore
+    net, _ = solved
+
+    def boom(*a, **k):
+        raise NodeFailure("mesh exploded", permanent=True)
+
+    monkeypatch.setattr(mn, "plan_multinode", boom)
+    client = LocalClient(ScheduleStore(tmp_path / "store"))
+    res = client.solve(net, HW, nodes=4, max_seg_len=2)
+    # one rung down: single-node answer, flagged degraded, never an error
+    assert res.schedule.valid
+    assert res.mesh_plan is None and res.nodes == 1
+    assert res.degraded and "fallback" in res.error
+
+
+def test_server_nodes_path(tmp_path, solved):
+    import asyncio
+
+    from repro.service import (ScheduleStore, SolveRequest, SolveServer,
+                               serve_batch)
+    net, _ = solved
+    server = SolveServer(ScheduleStore(tmp_path / "store"))
+    reqs = [SolveRequest.make(net, HW, nodes=4, max_seg_len=2),
+            SolveRequest.make(net, HW, max_seg_len=2)]
+    r4, r1 = asyncio.run(serve_batch(server, reqs))
+    assert r4.mesh_plan is not None and r4.nodes == 4
+    assert r1.mesh_plan is None and r1.nodes == 1

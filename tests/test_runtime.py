@@ -200,3 +200,93 @@ def test_circuit_breaker_state_machine():
     assert br.state == "closed" and br.allow()
     assert br.stats()["opens"] == 1         # re-open is not a new open
     assert br.stats()["consecutive_failures"] == 0
+
+
+def test_straggler_forget_and_stats():
+    d = StragglerDetector(factor=1.5, warmup=2)
+    for _ in range(3):
+        for h in ("a", "b"):
+            d.record(h, 1.0)
+        d.record("slow", 9.0)
+    assert d.stragglers() == ["slow"]
+    st = d.stats()
+    assert st["stragglers"] == ["slow"]
+    assert st["counts"]["slow"] == 3
+    d.forget("slow")                       # drained/replaced node
+    assert d.stragglers() == []
+    assert "slow" not in d.stats()["hosts"]
+    med = d.stats()["fleet_median"]
+    assert med == pytest.approx(1.0)       # median no longer poisoned
+    d.forget("never-seen")                 # idempotent / unknown ok
+
+
+def test_elastic_planner_non_pow2_survivors():
+    ep = ElasticPlanner(model_axis=16)
+    data, model = ep.plan(17 * 16)         # 17 groups -> pow2 floor 16
+    assert (data, model) == (16, 16)
+    data, _ = ep.plan(3 * 16 + 7)          # ragged: 3 groups -> 2
+    assert data == 2
+    data, _ = ep.plan(16)                  # exactly one group survives
+    assert data == 1
+
+
+def test_elastic_planner_min_data_boundary():
+    ep = ElasticPlanner(model_axis=16, min_data=2)
+    assert ep.plan(32) == (2, 16)          # boundary: exactly min_data
+    with pytest.raises(NodeFailure) as ei:
+        ep.plan(31)                        # one chip short of 2 groups
+    assert ei.value.permanent
+
+
+def test_elastic_batch_round_trip_keeps_microbatch():
+    ep = ElasticPlanner(model_axis=16)
+    b16 = 256
+    per_replica = b16 // 16
+    b8 = ep.batch_for(b16, 8, 16)
+    assert b8 // 8 == per_replica          # microbatch preserved down
+    assert ep.batch_for(b8, 16, 8) == b16  # and exactly restored up
+
+
+def test_elastic_plan_nodes():
+    ep = ElasticPlanner(model_axis=1, min_data=2)
+    assert ep.plan_nodes(3) == 3           # every survivor stays used
+    assert ep.plan_nodes(2) == 2
+    with pytest.raises(NodeFailure) as ei:
+        ep.plan_nodes(1)
+    assert ei.value.permanent
+
+
+def test_recovery_permanent_loss_reshard_resume():
+    # permanent loss -> on_permanent_loss re-plans the mesh -> restore
+    # rewinds to the checkpoint -> the run RESUMES and completes on the
+    # shrunk mesh (the full reshard path, with a simulated restore)
+    ep = ElasticPlanner(model_axis=16)
+    world = {"chips": 512, "data": 16, "ckpt": 0, "restores": 0}
+    done = []
+
+    def reshard(lost):
+        world["chips"] -= lost
+        world["data"], _ = ep.plan(world["chips"])
+
+    def restore():
+        world["restores"] += 1
+        return world["ckpt"]
+
+    def step(i):
+        if i == 3 and world["chips"] == 512:
+            raise NodeFailure("host down", lost_devices=384,
+                              permanent=True)
+        done.append((i, world["data"]))
+        if i % 2 == 0:
+            world["ckpt"] = i + 1          # checkpoint after even steps
+
+    stats = run_with_recovery(step, 0, 6, restore,
+                              policy=RecoveryPolicy(backoff_seconds=0),
+                              on_permanent_loss=reshard,
+                              sleep=lambda s: None)
+    assert stats.reshards == 1 and stats.restarts == 1
+    assert world["restores"] == 1
+    assert world["data"] == 8              # 128 chips -> 8 TP groups
+    # steps 3..5 ran on the shrunk mesh after replaying from ckpt 3
+    assert [d for i, d in done if i >= 3] == [8, 8, 8]
+    assert [i for i, _ in done] == [0, 1, 2, 3, 4, 5]
