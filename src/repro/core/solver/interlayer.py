@@ -24,6 +24,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ...hw.template import HWTemplate
+from ...obs import trace
 from ...workloads.layers import LayerGraph, LayerSpec
 from ..estimate import estimate_layer, min_buffer_requirement_bytes
 from ..estimate_batch import GraphPack, estimate_segments, pack_graph
@@ -521,7 +522,8 @@ def dp_prioritize(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
     ``Chain`` objects exist only for the returned chains.
     """
     n = len(graph.layers)
-    cb = _candidate_batch(graph, hw, range(n), max_seg_len, stats)
+    with trace.span("dp.enumerate", graph=graph.name, layers=n):
+        cb = _candidate_batch(graph, hw, range(n), max_seg_len, stats)
     if objective == "energy":
         costv = cb.energy
     elif objective == "edp":
@@ -545,46 +547,47 @@ def dp_prioritize(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
     back: List[List[Tuple[int, int]]] = [[] for _ in range(n + 1)]
     best_costs[0] = np.zeros(1)
     back[0] = [(-1, -1)]
-    for i in range(1, n + 1):
-        ids = by_stop[i]
-        parts: List[np.ndarray] = []
-        groups: List[Tuple[List[int], int, int]] = []   # (cands, k, offset)
-        off = 0
-        j = 0
-        n_ids = len(ids)
-        while j < n_ids:
-            s = starts_l[ids[j]]
-            j2 = j
-            while j2 < n_ids and starts_l[ids[j2]] == s:
-                j2 += 1
-            prev = best_costs[s]
-            if prev is not None and len(prev):
-                cands = ids[j:j2]
-                # [m, k] candidate-major: same order as the scalar loops
-                parts.append((costv[cands][:, None] + prev[None, :]).ravel())
-                groups.append((cands, len(prev), off))
-                off += len(cands) * len(prev)
-            j = j2
-        if not parts:
-            raise RuntimeError(f"no valid segment chain up to layer {i}")
-        costs = np.concatenate(parts) if len(parts) > 1 else parts[0]
-        if len(costs) > k_s:
-            sel = np.argpartition(costs, k_s - 1)[:k_s]
-            # tie-break on the flat index so the kept order matches the
-            # scalar DP's stable sort (up to equal-cost boundary members)
-            sel = sel[np.lexsort((sel, costs[sel]))]
-        else:
-            sel = np.argsort(costs, kind="stable")
-        best_costs[i] = costs[sel]
-        back_i: List[Tuple[int, int]] = []
-        for jf in sel:
-            jf = int(jf)
-            for cands, k, goff in groups:
-                if jf < goff + len(cands) * k:
-                    local = jf - goff
-                    back_i.append((cands[local // k], local % k))
-                    break
-        back[i] = back_i
+    with trace.span("dp.select", graph=graph.name, k_s=k_s):
+        for i in range(1, n + 1):
+            ids = by_stop[i]
+            parts: List[np.ndarray] = []
+            groups: List[Tuple[List[int], int, int]] = []   # (cands, k, offset)
+            off = 0
+            j = 0
+            n_ids = len(ids)
+            while j < n_ids:
+                s = starts_l[ids[j]]
+                j2 = j
+                while j2 < n_ids and starts_l[ids[j2]] == s:
+                    j2 += 1
+                prev = best_costs[s]
+                if prev is not None and len(prev):
+                    cands = ids[j:j2]
+                    # [m, k] candidate-major: same order as the scalar loops
+                    parts.append((costv[cands][:, None] + prev[None, :]).ravel())
+                    groups.append((cands, len(prev), off))
+                    off += len(cands) * len(prev)
+                j = j2
+            if not parts:
+                raise RuntimeError(f"no valid segment chain up to layer {i}")
+            costs = np.concatenate(parts) if len(parts) > 1 else parts[0]
+            if len(costs) > k_s:
+                sel = np.argpartition(costs, k_s - 1)[:k_s]
+                # tie-break on the flat index so the kept order matches the
+                # scalar DP's stable sort (up to equal-cost boundary members)
+                sel = sel[np.lexsort((sel, costs[sel]))]
+            else:
+                sel = np.argsort(costs, kind="stable")
+            best_costs[i] = costs[sel]
+            back_i: List[Tuple[int, int]] = []
+            for jf in sel:
+                jf = int(jf)
+                for cands, k, goff in groups:
+                    if jf < goff + len(cands) * k:
+                        local = jf - goff
+                        back_i.append((cands[local // k], local % k))
+                        break
+            back[i] = back_i
 
     def build(i: int, rank: int) -> Tuple[SegmentScheme, ...]:
         segs: List[SegmentScheme] = []

@@ -23,6 +23,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ...hw.template import HWTemplate
+from ...obs import metrics, trace
 from ...runtime import inject
 from ...workloads.layers import LayerGraph, LayerSpec
 from ..cost_model import CostBreakdown, combine_segment, evaluate_layer
@@ -30,6 +31,23 @@ from ..directives import LayerScheme
 from .interlayer import Chain, PruneStats, dp_prioritize, io_flags, \
     _consumer_map
 from .intralayer import Constraints, solve_intra_layer
+
+# -- telemetry (repro.obs) ---------------------------------------------------
+_m_segments = metrics.counter(
+    "solver_segments_total", "detail-solved segments, by outcome",
+    ("outcome",))
+_m_segcache = metrics.counter(
+    "solver_segcache_total",
+    "per-solve segment-cache lookups during chain scoring", ("outcome",))
+_m_candidates = metrics.counter(
+    "solver_candidates_total",
+    "inter-layer segment candidates, by pruning stage", ("stage",))
+_m_chains = metrics.counter(
+    "solver_chains_total", "candidate chains, by scoring outcome",
+    ("outcome",))
+_m_solve_seconds = metrics.histogram(
+    "solver_solve_seconds", "end-to-end network solve wall clock",
+    ("entry",))
 
 
 @dataclasses.dataclass
@@ -203,6 +221,19 @@ def solve_segment(graph: LayerGraph, hw: HWTemplate, seg, consumers,
     (the conservative inter-layer check is allowed false positives, §IV-B),
     the segment degrades to coarse time-sharing of the same node regions.
     Returns (total, schemes, costs, pipelined)."""
+    with trace.span("solve.segment", graph=graph.name,
+                    seg=f"{seg.start}:{seg.stop}") as sp:
+        total, schemes, costs, pipelined = _solve_segment_impl(
+            graph, hw, seg, consumers, layer_solver)
+        outcome = "infeasible" if total is None else \
+            "pipelined" if pipelined else "coarse"
+        sp.set(outcome=outcome)
+    _m_segments.inc(outcome=outcome)
+    return total, schemes, costs, pipelined
+
+
+def _solve_segment_impl(graph: LayerGraph, hw: HWTemplate, seg, consumers,
+                        layer_solver):
     # chaos hook: a seeded injector can crash ("error") or stall ("slow")
     # this segment solve — thread-pool workers inherit the global injector
     inject.maybe_fault("solve.segment",
@@ -406,8 +437,11 @@ def _solve_chain(graph: LayerGraph, hw: HWTemplate, chain: Chain,
         # distinct (range, alloc, granule) segment once per solve() call
         key = _seg_key(seg)
         if seg_cache is not None and key in seg_cache:
+            _m_segcache.inc(outcome="hit")
             seg_total, seg_schemes, seg_costs, pipe = seg_cache[key]
         else:
+            if seg_cache is not None:
+                _m_segcache.inc(outcome="miss")
             seg_total, seg_schemes, seg_costs, pipe = solve_segment(
                 graph, hw, seg, consumers, layer_solver)
             if seg_cache is not None:
@@ -420,6 +454,15 @@ def _solve_chain(graph: LayerGraph, hw: HWTemplate, chain: Chain,
         energy += seg_total.energy_pj
         latency += seg_total.latency_cycles
     return energy, latency, schemes, costs, tuple(pipelined)
+
+
+def _record_prune(stats: PruneStats, before: Tuple[int, int, int]
+                  ) -> None:
+    """Publish one DP run's candidate funnel (enumerated -> validity ->
+    Pareto-kept) as counter deltas against the pre-run snapshot."""
+    _m_candidates.inc(stats.total - before[0], stage="enumerated")
+    _m_candidates.inc(stats.after_validity - before[1], stage="valid")
+    _m_candidates.inc(stats.after_pareto - before[2], stage="kept")
 
 
 def _candidate_chains(graph: LayerGraph, hw: HWTemplate, k_s: int,
@@ -467,8 +510,12 @@ def solve_topk(graph: LayerGraph, hw: HWTemplate, k: int = 1,
     t0 = time.perf_counter()
     stats = stats_out if stats_out is not None else PruneStats()
     k_eff = max(k_s, k)
-    chains = _candidate_chains(graph, hw, k_eff, max_seg_len, objective,
-                               stats, seed_chains, use_dp)
+    before = (stats.total, stats.after_validity, stats.after_pareto)
+    with trace.span("solve.dp", graph=graph.name, k_s=k_eff):
+        chains = _candidate_chains(graph, hw, k_eff, max_seg_len,
+                                   objective, seed_chains=seed_chains,
+                                   stats=stats, use_dp=use_dp)
+    _record_prune(stats, before)
     consumers = _consumer_map(graph)
     # the chains share most of their segments: collect the distinct ones up
     # front and solve them in parallel before the (cheap) chain scoring
@@ -477,20 +524,28 @@ def solve_topk(graph: LayerGraph, hw: HWTemplate, k: int = 1,
         for seg in chain.segments:
             distinct.setdefault(_seg_key(seg), seg)
     seg_cache: Dict = {}
-    _pool_solve_segments([(graph, consumers, seg_cache, distinct,
-                           layer_solver)], hw, max_workers)
+    with trace.span("solve.segments_pool", graph=graph.name,
+                    n=len(distinct)):
+        _pool_solve_segments([(graph, consumers, seg_cache, distinct,
+                               layer_solver)], hw, max_workers)
     scored: List[Tuple[float, int, NetworkSchedule]] = []
-    for ci, chain in enumerate(chains):
-        e, lat, schemes, costs, pipe = _solve_chain(
-            graph, hw, chain, layer_solver, seg_cache, consumers)
-        score = _chain_score(e, lat, objective)
-        if score == float("inf"):
-            continue
-        scored.append((score, ci, NetworkSchedule(
-            graph.name, chain, schemes, costs, e, lat, 0.0, stats, pipe)))
+    with trace.span("solve.chain_score", graph=graph.name,
+                    n=len(chains)):
+        for ci, chain in enumerate(chains):
+            e, lat, schemes, costs, pipe = _solve_chain(
+                graph, hw, chain, layer_solver, seg_cache, consumers)
+            score = _chain_score(e, lat, objective)
+            if score == float("inf"):
+                _m_chains.inc(outcome="infeasible")
+                continue
+            _m_chains.inc(outcome="scored")
+            scored.append((score, ci, NetworkSchedule(
+                graph.name, chain, schemes, costs, e, lat, 0.0, stats,
+                pipe)))
     scored.sort(key=lambda t: (t[0], t[1]))     # stable: DP order on ties
     out = [s for _, _, s in scored[:max(1, k)]]
     elapsed = time.perf_counter() - t0
+    _m_solve_seconds.observe(elapsed, entry="topk")
     for s in out:
         s.solve_seconds = elapsed
     return out
@@ -578,9 +633,11 @@ def solve_many(items: Sequence[Tuple[LayerGraph, HWTemplate]],
         seeds = seed_chains[i] if seed_chains is not None else None
         solver = layer_solvers[i] if layer_solvers is not None \
             and layer_solvers[i] is not None else layer_solver
-        chains = _candidate_chains(graph, hw, k_s, max_seg_len, objective,
-                                   stats, seeds,
-                                   use_dp=not (seeds and seeds_only))
+        with trace.span("solve.dp", graph=graph.name, k_s=k_s):
+            chains = _candidate_chains(graph, hw, k_s, max_seg_len,
+                                       objective, stats, seeds,
+                                       use_dp=not (seeds and seeds_only))
+        _record_prune(stats, (0, 0, 0))
         consumers = _consumer_map(graph)
         distinct: Dict[Tuple, object] = {}
         for chain in chains:
@@ -596,7 +653,8 @@ def solve_many(items: Sequence[Tuple[LayerGraph, HWTemplate]],
     for (graph, hw, *_), job in zip(per, jobs):
         by_hw.setdefault(hw, []).append(job)
     for hw_key, hw_jobs in by_hw.items():
-        _pool_solve_segments(hw_jobs, hw_key, max_workers)
+        with trace.span("solve.segments_pool", n=len(hw_jobs)):
+            _pool_solve_segments(hw_jobs, hw_key, max_workers)
     out: List[NetworkSchedule] = []
     elapsed = time.perf_counter() - t0
     for graph, hw, chains, consumers, seg_cache, stats, solver in per:
@@ -606,7 +664,9 @@ def solve_many(items: Sequence[Tuple[LayerGraph, HWTemplate]],
                 graph, hw, chain, solver, seg_cache, consumers)
             score = _chain_score(e, lat, objective)
             if score == float("inf"):
+                _m_chains.inc(outcome="infeasible")
                 continue
+            _m_chains.inc(outcome="scored")
             if best is None or (score, ci) < (best[0], best[1]):
                 best = (score, ci, NetworkSchedule(
                     graph.name, chain, schemes, costs, e, lat, elapsed,
@@ -615,4 +675,5 @@ def solve_many(items: Sequence[Tuple[LayerGraph, HWTemplate]],
             _invalid_schedule(graph, stats)
         sched.solve_seconds = elapsed
         out.append(sched)
+    _m_solve_seconds.observe(elapsed, entry="many")
     return out

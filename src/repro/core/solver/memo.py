@@ -18,9 +18,14 @@ import threading
 from typing import Any, Dict, Hashable, Optional, Tuple
 
 from ...hw.template import HWTemplate
+from ...obs import metrics
 from ...workloads.layers import LayerSpec
 from ..cost_model import CostBreakdown
 from ..directives import LayerScheme
+
+_m_memo = metrics.counter(
+    "solver_memo_total", "layer-signature memo lookups",
+    ("cache", "outcome"))
 
 
 def _freeze_mapping(m) -> Tuple:
@@ -68,10 +73,13 @@ class SolveCache:
     compute the same value; last put wins).
     """
 
-    def __init__(self, max_entries: int = 4096):
+    def __init__(self, max_entries: int = 4096, name: str = "anon"):
         self.max_entries = max_entries
+        self.name = name
         self._store: Dict[Hashable, Tuple[Optional[list], CostBreakdown]] = {}
         self._lock = threading.Lock()
+        # plain ints (tests read them directly); lookups are also
+        # mirrored into solver_memo_total{cache,outcome} (repro.obs)
         self.hits = 0
         self.misses = 0
 
@@ -90,8 +98,10 @@ class SolveCache:
             entry = self._store.get(key)
             if entry is None:
                 self.misses += 1
+                _m_memo.inc(cache=self.name, outcome="miss")
                 return None
             self.hits += 1
+        _m_memo.inc(cache=self.name, outcome="hit")
         # entries are never mutated after insertion, so the defensive
         # copies can be built outside the lock (keeps the hit path of
         # concurrent segment solves from serializing)
@@ -111,8 +121,8 @@ class SolveCache:
 
 
 # process-wide caches, one per solver family
-intra_cache = SolveCache()
-exhaustive_cache = SolveCache()
+intra_cache = SolveCache(name="intra")
+exhaustive_cache = SolveCache(name="exhaustive")
 
 
 def clear_all() -> None:

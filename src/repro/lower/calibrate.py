@@ -298,7 +298,9 @@ def run_network_calibration(hw: Optional[HWTemplate] = None,
                                       f"at {ver.worst_layer}"})
             continue
         entry["measured_seconds"] = measure_network(
-            nplan, iters=iters, warmup=0, runner=run)
+            nplan, iters=iters, warmup=0, runner=run,
+            predicted_seconds=entry["predicted_seconds_raw"],
+            drift_source="calibration")
         entries.append(entry)
 
     record: Dict = {

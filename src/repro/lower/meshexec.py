@@ -51,11 +51,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.solver.multinode import MultiNodePlan, repartition
+from ..obs import metrics, trace
 from ..runtime import inject
 from ..runtime.fault import ElasticPlanner, NodeFailure
 from ..runtime.straggler import BackupDispatcher, StragglerDetector
 from .netexec import _check_executable, _layer_fn
 from .netplan import NetworkPlan
+
+# -- telemetry (repro.obs) ---------------------------------------------------
+_m_alive = metrics.gauge("mesh_alive_nodes",
+                         "live worker nodes in the pool")
+_m_recovery = metrics.histogram(
+    "mesh_recovery_seconds",
+    "wall clock per node-failure recovery (repartition or fallback)")
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +167,9 @@ class NodePool:
         self._dead: Dict[int, str] = {}
         self._slow: Dict[int, float] = {}
         self._lock = threading.Lock()
+        self._events = metrics.CounterGroup("mesh_pool",
+                                            ("submits", "kills"))
+        _m_alive.set(n)
 
     def alive(self) -> List[int]:
         with self._lock:
@@ -173,6 +184,10 @@ class NodePool:
             if nid in self._dead:
                 return
             self._dead[nid] = reason
+            alive = self.n - len(self._dead)
+        self._events.inc("kills")
+        _m_alive.set(alive)
+        trace.instant("mesh.node_killed", node=nid, reason=reason)
         self._workers[nid].shutdown(wait=False, cancel_futures=True)
 
     def set_slow(self, nid: int, factor: float) -> None:
@@ -191,10 +206,23 @@ class NodePool:
             raise NodeFailure(f"node {nid} is dead ({reason})",
                               permanent=True)
         try:
+            self._events.inc("submits")
             return worker.submit(fn, *args)
         except RuntimeError as e:       # shutdown raced the check
             raise NodeFailure(f"node {nid} is dead (shut down)",
                               permanent=True) from e
+
+    def stats(self) -> Dict:
+        """Pool control-surface snapshot (mirrored into the registry as
+        mesh_pool_events_total / mesh_alive_nodes)."""
+        with self._lock:
+            return {"nodes": self.n,
+                    "alive": [i for i in range(self.n)
+                              if i not in self._dead],
+                    "dead": dict(self._dead),
+                    "slow": dict(self._slow),
+                    "submits": self._events["submits"],
+                    "kills": self._events["kills"]}
 
     def close(self) -> None:
         for w in self._workers.values():
@@ -283,14 +311,39 @@ class MeshExecutor:
         self._lock = threading.RLock()
         self._rr = itertools.count()
         self.fallback = False
-        self.requests = 0
-        self.degraded_requests = 0
-        self.failures = 0
-        self.repartitions = 0
-        self.resolved_segments = 0
-        self.backups = 0
-        self.replays = 0
+        # mirrored into mesh_events_total{event=...} (repro.obs)
+        self._events = metrics.CounterGroup("mesh", (
+            "requests", "degraded_requests", "failures", "repartitions",
+            "resolved_segments", "backups", "replays"))
         self.recovery_seconds = 0.0
+
+    @property
+    def requests(self) -> int:
+        return self._events["requests"]
+
+    @property
+    def degraded_requests(self) -> int:
+        return self._events["degraded_requests"]
+
+    @property
+    def failures(self) -> int:
+        return self._events["failures"]
+
+    @property
+    def repartitions(self) -> int:
+        return self._events["repartitions"]
+
+    @property
+    def resolved_segments(self) -> int:
+        return self._events["resolved_segments"]
+
+    @property
+    def backups(self) -> int:
+        return self._events["backups"]
+
+    @property
+    def replays(self) -> int:
+        return self._events["replays"]
 
     # -- node choice ---------------------------------------------------------
     def _pick_node(self, seg_index: int, salt: int) -> Optional[int]:
@@ -316,7 +369,20 @@ class MeshExecutor:
         host = f"node{nid}"
         straggling = host in set(self.detector.stragglers())
         backup_nid = self._backup_node(nid) if straggling else None
+        with trace.span("mesh.task", node=nid,
+                        segment=task.index) as sp:
+            return self._dispatch_inner(nid, host, task, state,
+                                        straggling, backup_nid, sp)
+
+    def _dispatch_inner(self, nid: int, host: str, task: SegmentTask,
+                        state: Dict, straggling: bool,
+                        backup_nid: Optional[int], sp) -> Dict:
         t0 = time.perf_counter()
+        if straggling:
+            trace.instant(
+                "mesh.straggler", node=nid,
+                reason=f"EWMA latency > {self.detector.factor:g}x "
+                       f"fleet median")
         if backup_nid is not None:
             med = self.detector.fleet_median() or 0.0
             deadline = max(self.min_backup_deadline_s,
@@ -331,9 +397,13 @@ class MeshExecutor:
                         task, state).result())
                 won_backup = bd.failovers > 0
             dt = time.perf_counter() - t0
-            with self._lock:
-                if won_backup:
-                    self.backups += 1
+            trace.instant(
+                "mesh.backup_dispatch", primary=nid, backup=backup_nid,
+                winner=backup_nid if won_backup else nid,
+                reason="straggler flagged; raced a healthy peer")
+            sp.set(backup=backup_nid, won_backup=won_backup)
+            if won_backup:
+                self._events.inc("backups")
             self.detector.record(f"node{backup_nid}" if won_backup
                                  else host, dt)
             return out
@@ -358,7 +428,7 @@ class MeshExecutor:
                 self.pool.kill(nid, str(err))
                 # a drained node must stop poisoning the fleet median
                 self.detector.forget(f"node{nid}")
-            self.failures += 1
+            self._events.inc("failures")
             survivors = self.pool.alive()
             try:
                 self.planner.plan_nodes(len(survivors))
@@ -369,14 +439,22 @@ class MeshExecutor:
                 new_plan, dirty = repartition(
                     self.plan, self.schedule, self.graph, self.hw,
                     survivors)
-            except NodeFailure:
+            except NodeFailure as fe:
                 self.fallback = True
+                trace.instant("mesh.fallback",
+                              reason=f"{err} -> {fe}")
             else:
                 if dirty:           # idempotent under concurrent failures
                     self.plan = new_plan
-                    self.repartitions += 1
-                    self.resolved_segments += len(dirty)
-            self.recovery_seconds += time.perf_counter() - t0
+                    self._events.inc("repartitions")
+                    self._events.inc("resolved_segments", len(dirty))
+                    trace.instant(
+                        "mesh.repartition", dead=nid,
+                        dirty_segments=len(dirty),
+                        survivors=len(survivors), reason=str(err))
+            dt = time.perf_counter() - t0
+            self.recovery_seconds += dt
+        _m_recovery.observe(dt)
 
     # -- request execution ---------------------------------------------------
     def run(self, state_inputs: Dict,
@@ -388,40 +466,44 @@ class MeshExecutor:
         boundary, never from the start of the request."""
         t0 = time.perf_counter()
         salt = next(self._rr)
-        with self._lock:
-            self.requests += 1
+        self._events.inc("requests")
         state: Dict[str, np.ndarray] = dict(state_inputs)
         i = 0
         replays = 0
         backups0 = self.backups
         degraded = False
-        while i < len(self.tasks):
-            task = self.tasks[i]
-            if self.fallback:
-                out = task.run(state)   # last rung: inline, degraded
-                degraded = True
-            else:
-                nid = self._pick_node(task.index, salt)
-                if nid is None:
-                    self._on_node_failure(None, NodeFailure(
-                        f"segment {task.index} lost every node"))
-                    replays += 1
-                    continue
-                try:
-                    out = self._dispatch(nid, task, state)
-                except NodeFailure as e:
-                    self._on_node_failure(nid, e)
-                    replays += 1
-                    continue            # replay from the last boundary
-            state.update(out)           # checkpoint the boundary
-            i += 1
-        outputs = {k: v for k, v in state.items()
-                   if k not in state_inputs}
-        with self._lock:
-            self.replays += replays
+        with trace.span("mesh.request",
+                        key=request_key) as req_span:
+            while i < len(self.tasks):
+                task = self.tasks[i]
+                if self.fallback:
+                    with trace.span("mesh.task", node="driver",
+                                    segment=task.index):
+                        out = task.run(state)   # last rung: inline, degraded
+                    degraded = True
+                else:
+                    nid = self._pick_node(task.index, salt)
+                    if nid is None:
+                        self._on_node_failure(None, NodeFailure(
+                            f"segment {task.index} lost every node"))
+                        replays += 1
+                        continue
+                    try:
+                        out = self._dispatch(nid, task, state)
+                    except NodeFailure as e:
+                        self._on_node_failure(nid, e)
+                        replays += 1
+                        continue            # replay from the last boundary
+                state.update(out)           # checkpoint the boundary
+                i += 1
+            outputs = {k: v for k, v in state.items()
+                       if k not in state_inputs}
+            self._events.inc("replays", replays)
             backups = self.backups - backups0
             if degraded:
-                self.degraded_requests += 1
+                self._events.inc("degraded_requests")
+            req_span.set(replays=replays, backups=backups,
+                         degraded=degraded)
         return MeshExecution(outputs=outputs, degraded=degraded,
                              replays=replays, backups=backups,
                              seconds=time.perf_counter() - t0)

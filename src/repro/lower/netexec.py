@@ -30,6 +30,7 @@ sum kernel computes the concatenation.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 import zlib
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -39,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ref
+from ..obs import metrics, trace
 from ..workloads.layers import LayerSpec
 from .exec import (_check_compiled_revisit_order, _run_conv, _run_eltwise,
                    _run_fc, _run_pool, input_extent, rel_error)
@@ -328,11 +330,37 @@ def verify_network(nplan: NetworkPlan, interpret: bool = True,
     return compare_network(nplan, ex, inputs, tol)
 
 
+_m_drift = metrics.histogram(
+    "latency_drift_ratio",
+    "measured / predicted network latency of lowered plans",
+    ("source",), buckets=metrics.DRIFT_BUCKETS)
+
+
+def record_latency_drift(predicted_seconds: Optional[float],
+                         measured_seconds: float,
+                         source: str = "netexec") -> Optional[float]:
+    """Record one predicted-vs-measured latency pair into the
+    ``latency_drift_ratio`` histogram (+ a trace instant), so cost-model
+    calibration decay is visible at serve time, not only in the
+    calibration bench.  Returns the ratio, or None if either side is
+    unusable (zero/negative prediction, NaN measurement)."""
+    if not predicted_seconds or predicted_seconds <= 0.0:
+        return None
+    if not math.isfinite(measured_seconds) or measured_seconds <= 0.0:
+        return None
+    ratio = measured_seconds / predicted_seconds
+    _m_drift.observe(ratio, source=source)
+    trace.instant("netexec.latency_drift", source=source,
+                  ratio=round(ratio, 4))
+    return ratio
+
+
 def measure_network(nplan: NetworkPlan, inputs: Optional[Dict] = None,
                     interpret: bool = True, iters: int = 2,
                     warmup: int = 1,
                     runner: Optional[Callable[[], NetworkExecution]] = None,
-                    ) -> float:
+                    predicted_seconds: Optional[float] = None,
+                    drift_source: str = "netexec") -> float:
     """Measured wall-clock seconds for one end-to-end network execution
     (min over ``iters`` after ``warmup`` runs compile every layer step).
     Includes the buffer schedule's real host round-trips — network time,
@@ -349,4 +377,7 @@ def measure_network(nplan: NetworkPlan, inputs: Optional[Dict] = None,
         warmup = max(1, warmup)         # fresh steps always need a compile
     for _ in range(warmup):
         runner()
-    return min(runner().seconds for _ in range(max(1, iters)))
+    out = min(runner().seconds for _ in range(max(1, iters)))
+    if predicted_seconds is not None:
+        record_latency_drift(predicted_seconds, out, source=drift_source)
+    return out

@@ -1,0 +1,50 @@
+"""Unified observability layer: spans, metrics, trace export.
+
+The measurement substrate under the whole stack — solver, schedule
+service, store, mesh executor, fault injection — with zero dependencies
+and a free disabled path:
+
+``obs.trace``
+    Thread-aware span tracing (``with span("solve.segment", ...)``) and
+    instant events (``instant("mesh.repartition", reason=...)``).  A
+    no-op global-read fast path when disabled; Chrome trace-event JSON
+    (Perfetto-loadable) when enabled.
+``obs.metrics``
+    A process-wide registry of labeled counters / gauges / histograms
+    with a JSON ``snapshot()`` and Prometheus text ``exposition()``.
+    Always on (updates are nanoseconds); ``off()`` exists so the
+    overhead bench has a true zero-observability baseline.
+
+Three switches::
+
+    obs.off()                  # nothing recorded at all (baseline)
+    obs.on()                   # metrics only (the production default)
+    with trace.tracing(path):  # metrics + spans, exported on exit
+        ...
+
+``python -m repro.obs summarize TRACE.json`` aggregates an exported
+trace; ``python -m repro.obs metrics [--prom]`` dumps the registry.
+See README "Observability" for the event/metric naming scheme.
+"""
+from . import metrics, trace
+from .metrics import (REGISTRY, Counter, CounterGroup, Gauge, Histogram,
+                      Registry, counter, gauge, histogram)
+from .trace import Tracer, instant, span, tracing
+
+
+def off() -> None:
+    """Disable all observability: tracing off, metric updates skipped.
+    The overhead-measurement baseline — not the production default."""
+    trace.disable()
+    metrics.set_off(True)
+
+
+def on() -> None:
+    """Restore the production default: metrics on, tracing off (enable
+    tracing separately via ``trace.tracing``/``trace.enable``)."""
+    metrics.set_off(False)
+
+
+__all__ = ["metrics", "trace", "span", "instant", "tracing", "Tracer",
+           "REGISTRY", "Registry", "Counter", "Gauge", "Histogram",
+           "CounterGroup", "counter", "gauge", "histogram", "off", "on"]

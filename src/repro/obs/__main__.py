@@ -1,0 +1,131 @@
+"""Observability CLI.
+
+    python -m repro.obs summarize TRACE.json [--json]
+    python -m repro.obs metrics [SNAPSHOT.json] [--prom | --json]
+
+``summarize`` aggregates an exported Chrome trace-event file (per-span
+count / total / max duration, instant-event counts, thread rows) — the
+quick look before opening the file in Perfetto (https://ui.perfetto.dev).
+``metrics`` renders a registry snapshot: from a ``BENCH_obs.json`` /
+``stats --json`` style file when given (any JSON whose top level or
+``metrics`` key is a registry snapshot), else the live in-process
+registry (empty in a fresh CLI process — useful mainly under a driver
+that populated it).  ``--prom`` emits Prometheus text exposition.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from . import metrics, trace
+
+
+def cmd_summarize(args) -> int:
+    events = trace.load_events(args.trace)
+    s = trace.summarize_events(events)
+    if args.json:
+        json.dump(s, sys.stdout, indent=1)
+        print()
+        return 0
+    print(f"{args.trace}: {s['n_events']} events, "
+          f"{len(s['threads'])} threads")
+    if s["spans"]:
+        print("spans (count / total ms / max ms):")
+        width = max(len(n) for n in s["spans"])
+        for name in sorted(s["spans"],
+                           key=lambda n: -s["spans"][n]["total_us"]):
+            sp = s["spans"][name]
+            print(f"  {name:<{width}}  {sp['count']:>6}  "
+                  f"{sp['total_us'] / 1e3:>10.2f}  "
+                  f"{sp['max_us'] / 1e3:>10.2f}")
+    if s["instants"]:
+        print("instant events:")
+        for name in sorted(s["instants"]):
+            print(f"  {name}: {s['instants'][name]}")
+    print("open in Perfetto: https://ui.perfetto.dev (drag the file in)")
+    return 0
+
+
+def _snapshot_from_file(path: str) -> dict:
+    with open(path) as f:
+        d = json.load(f)
+    # accept a bare registry snapshot or a record embedding one
+    if isinstance(d, dict) and "metrics" in d and \
+            isinstance(d["metrics"], dict):
+        return d["metrics"]
+    return d
+
+
+def cmd_metrics(args) -> int:
+    if args.snapshot:
+        snap = _snapshot_from_file(args.snapshot)
+    else:
+        snap = metrics.REGISTRY.snapshot()
+    if args.prom:
+        if args.snapshot:
+            # rebuild a registry from the snapshot for text exposition
+            reg = metrics.Registry()
+            for name, fam in snap.items():
+                if fam.get("kind") == "histogram":
+                    continue            # buckets are not re-loadable 1:1
+                cls = {"counter": reg.counter,
+                       "gauge": reg.gauge}.get(fam.get("kind"))
+                if cls is None:
+                    continue
+                m = cls(name, fam.get("help", ""),
+                        tuple(fam.get("labelnames", ())))
+                for s in fam.get("series", []):
+                    m.inc(s["value"], **s["labels"])
+            print(reg.exposition(), end="")
+        else:
+            print(metrics.REGISTRY.exposition(), end="")
+        return 0
+    if args.json:
+        json.dump(snap, sys.stdout, indent=1)
+        print()
+        return 0
+    for name in sorted(snap):
+        fam = snap[name]
+        print(f"{name} ({fam.get('kind', '?')}) — "
+              f"{fam.get('help', '')}")
+        for s in fam.get("series", []):
+            labels = ",".join(f"{k}={v}" for k, v in s["labels"].items())
+            if "count" in s:            # histogram series
+                mean = s["sum"] / s["count"] if s["count"] else 0.0
+                print(f"  {{{labels}}} count={s['count']} "
+                      f"mean={mean:.6g} sum={s['sum']:.6g}")
+            else:
+                print(f"  {{{labels}}} {s['value']:g}")
+    if not snap:
+        print("(registry is empty)")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="verb", required=True)
+
+    p = sub.add_parser("summarize", help="aggregate an exported trace")
+    p.add_argument("trace", help="Chrome trace-event JSON file")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable summary")
+    p.set_defaults(fn=cmd_summarize)
+
+    p = sub.add_parser("metrics", help="dump a metrics snapshot")
+    p.add_argument("snapshot", nargs="?", default=None,
+                   help="snapshot JSON file (default: live registry)")
+    p.add_argument("--prom", action="store_true",
+                   help="Prometheus text exposition")
+    p.add_argument("--json", action="store_true",
+                   help="raw snapshot JSON")
+    p.set_defaults(fn=cmd_metrics)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

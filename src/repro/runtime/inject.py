@@ -50,6 +50,11 @@ import time
 from contextlib import contextmanager
 from typing import Dict, List, Mapping, Optional, Tuple
 
+from ..obs import metrics, trace
+
+_m_faults = metrics.counter("faults_injected_total",
+                            "chaos faults fired, by site", ("site",))
+
 #: sites the production code instruments (``FaultPlan`` rejects others)
 SITES = ("store.read", "store.write", "store.index",
          "solve.segment", "autotune.measure",
@@ -165,6 +170,9 @@ class FaultInjector:
         with self._lock:
             self.fired[site] = self.fired.get(site, 0) + 1
             self.log.append((site, key, n, spec.kind))
+        _m_faults.inc(site=site)
+        trace.instant("fault.injected", site=site, key=key,
+                      occurrence=n, kind=spec.kind)
         return spec
 
     def fault(self, site: str, key: str = "") -> Optional[FaultSpec]:

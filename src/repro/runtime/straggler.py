@@ -19,6 +19,12 @@ import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Callable, Dict, List, Optional
 
+from ..obs import metrics
+
+_m_task_seconds = metrics.histogram(
+    "straggler_task_seconds",
+    "per-host task latencies fed to the straggler detector", ("host",))
+
 
 @dataclasses.dataclass
 class StragglerDetector:
@@ -31,6 +37,7 @@ class StragglerDetector:
         self._count: Dict[str, int] = {}
 
     def record(self, host: str, seconds: float) -> None:
+        _m_task_seconds.observe(seconds, host=host)
         prev = self._ewma.get(host)
         self._ewma[host] = seconds if prev is None else \
             (1 - self.alpha) * prev + self.alpha * seconds

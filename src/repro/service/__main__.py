@@ -2,7 +2,7 @@
 
     python -m repro.service solve    --net resnet --batch 64 [--deadline S]
     python -m repro.service get      --net resnet --batch 64 [--json]
-    python -m repro.service stats
+    python -m repro.service stats    [--json | --prom]
     python -m repro.service warm     --net resnet --batch 32
     python -m repro.service autotune --net mlp --batch 4 -k 3
     python -m repro.service repair
@@ -14,7 +14,9 @@ it twice demonstrates the cached path.  ``warm`` forces a warm-start
 solve seeded from the nearest family record (same net, different batch).
 ``autotune`` lowers + executes the top-k candidates and promotes the
 measured winner.  ``stats`` includes the resilience counters (corrupt /
-quarantined / io_errors / rebuilds).  ``repair`` rebuilds the store
+quarantined / io_errors / rebuilds); ``stats --json`` adds the full
+``repro.obs`` metrics-registry snapshot and ``--prom`` emits Prometheus
+text exposition.  ``repair`` rebuilds the store
 index from the records dir, quarantining corrupt records.  The store dir
 defaults to ``$REPRO_STORE_DIR`` or ``.repro_store``.
 """
@@ -110,6 +112,17 @@ def cmd_get(args) -> int:
 
 def cmd_stats(args) -> int:
     store = ScheduleStore(args.store_dir)
+    if getattr(args, "prom", False):
+        from ..obs.metrics import REGISTRY
+        sys.stdout.write(REGISTRY.exposition())
+        return 0
+    if getattr(args, "json", False):
+        from ..obs.metrics import REGISTRY
+        json.dump({"store": store.stats(),
+                   "metrics": REGISTRY.snapshot()},
+                  sys.stdout, indent=1)
+        print()
+        return 0
     print(json.dumps(store.stats(), indent=1))
     return 0
 
@@ -185,6 +198,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.set_defaults(fn=cmd_get)
 
     p = sub.add_parser("stats", help="store statistics")
+    p.add_argument("--json", action="store_true",
+                   help="store stats + repro.obs metrics snapshot")
+    p.add_argument("--prom", action="store_true",
+                   help="Prometheus text exposition of the registry")
     _add_common(p, net=False)
     p.set_defaults(fn=cmd_stats)
 

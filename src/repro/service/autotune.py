@@ -24,6 +24,7 @@ from typing import Dict, List, Optional
 
 from ..core.solver.kapla import solve_topk
 from ..hw.template import HWTemplate
+from ..obs import trace
 from ..runtime import inject
 from ..workloads.layers import LayerGraph
 from .signature import schedule_signature, solver_options
@@ -40,6 +41,14 @@ def _run_candidate(rank: int, sched, graph: LayerGraph, hw: HWTemplate,
     """Lower + verify + measure one candidate (raises ``_Skip`` with the
     disqualification reason).  Runs inside the per-candidate worker so a
     timeout can abandon it."""
+    with trace.span("autotune.candidate", rank=rank, graph=graph.name):
+        return _run_candidate_impl(rank, sched, graph, hw, seed, iters,
+                                   interpret, tol)
+
+
+def _run_candidate_impl(rank: int, sched, graph: LayerGraph,
+                        hw: HWTemplate, seed: int, iters: int,
+                        interpret: bool, tol: float) -> Dict:
     # execution lives behind jax; keep the service core numpy-only
     from ..lower.netexec import (compare_network, make_network_inputs,
                                  measure_network, network_runner)
@@ -58,7 +67,10 @@ def _run_candidate(rank: int, sched, graph: LayerGraph, hw: HWTemplate,
     if not ver.ok:
         raise _Skip(f"numerics {ver.max_rel_err:.2e} at "
                     f"{ver.worst_layer}")
-    measured = measure_network(nplan, iters=iters, warmup=0, runner=run)
+    measured = measure_network(
+        nplan, iters=iters, warmup=0, runner=run,
+        predicted_seconds=sched.total_latency_cycles / hw.freq_hz,
+        drift_source="autotune")
     if spec is not None and spec.kind == "nan":
         measured = float("nan")
     return {

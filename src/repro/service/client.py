@@ -27,6 +27,7 @@ from ..core.solver.kapla import (NetworkSchedule, seed_chains_from, solve,
                                  solve_greedy, solve_many,
                                  warm_layer_solver)
 from ..hw.template import HWTemplate
+from ..obs import metrics, trace
 from ..runtime.fault import CircuitBreaker, NodeFailure, RecoveryPolicy
 from ..runtime.inject import InjectedFault
 from ..workloads.layers import LayerGraph
@@ -41,6 +42,52 @@ TRANSIENT_ERRORS = (InjectedFault, NodeFailure, OSError, TimeoutError)
 #: KAPLA solves are ~sub-second, so retrying beats queueing behind a hang
 DEFAULT_RETRY_POLICY = RecoveryPolicy(max_retries=2, backoff_seconds=0.02,
                                       backoff_factor=2.0, max_backoff=0.5)
+
+
+# -- telemetry (repro.obs): every answer path reports through these ----------
+_m_requests = metrics.counter(
+    "service_requests_total",
+    "requests answered, by resolved ladder rung", ("source",))
+_m_request_seconds = metrics.histogram(
+    "service_request_seconds",
+    "service-side wall clock per answer, by resolved rung", ("source",))
+_m_degrade = metrics.counter(
+    "service_degrade_total",
+    "degradation-ladder drops, by rung transition", ("rung",))
+_m_slack = metrics.histogram(
+    "service_deadline_slack_seconds",
+    "deadline minus service time for deadline-carrying requests")
+
+#: generic per-rung reasons for ``service.resolved`` events when no
+#: specific fault forced the rung
+_RUNG_REASONS = {"cached": "store hit", "warm": "family near-miss seed",
+                 "cold": "full solve", "greedy": "ladder floor",
+                 "error": "ladder exhausted"}
+
+
+def record_resolution(sig: str, source: str, seconds: float,
+                      degraded: bool = False,
+                      reason: Optional[str] = None,
+                      deadline_s: Optional[float] = None) -> None:
+    """Publish one answered request: rung counter, latency histogram,
+    deadline slack, and a ``service.resolved`` instant in the trace.
+    The single funnel for every answer path — the ladder, the server's
+    cached/batched paths and ``LocalClient.solve_batch``."""
+    _m_requests.inc(source=source)
+    _m_request_seconds.observe(seconds, source=source)
+    if deadline_s is not None:
+        _m_slack.observe(deadline_s - seconds)
+    trace.instant("service.resolved", sig=sig[:12], source=source,
+                  degraded=bool(degraded),
+                  reason=reason or _RUNG_REASONS.get(source, ""))
+
+
+def record_degrade(sig: str, rung: str, reason: str) -> None:
+    """Publish one ladder drop (warm seed failed, transient retry,
+    greedy floor, mesh fallback) with its reason."""
+    _m_degrade.inc(rung=rung)
+    trace.instant("service.degrade", sig=sig[:12], rung=rung,
+                  reason=reason)
 
 
 class ServiceError(RuntimeError):
@@ -142,6 +189,7 @@ def attach_mesh_plan(res: ServiceResult,
     except Exception as e:
         err = res.error if res.error is not None else \
             f"multi-node partition failed ({e!r}); single-node fallback"
+        record_degrade(res.signature, "mesh->single", repr(e))
         return dataclasses.replace(res, mesh_plan=None, nodes=1,
                                    degraded=True, error=err)
 
@@ -156,17 +204,25 @@ class StoreGuard:
                  breaker: Optional[CircuitBreaker] = None):
         self.store = store
         self.breaker = breaker if breaker is not None else CircuitBreaker()
-        self.errors = 0
-        self.skipped = 0
+        self._events = metrics.CounterGroup("store_guard",
+                                            ("errors", "skipped"))
+
+    @property
+    def errors(self) -> int:
+        return self._events["errors"]
+
+    @property
+    def skipped(self) -> int:
+        return self._events["skipped"]
 
     def _guard(self, fn, *args, default=None, **kwargs):
         if not self.breaker.allow():
-            self.skipped += 1
+            self._events.inc("skipped")
             return default
         try:
             out = fn(*args, **kwargs)
         except StoreError:
-            self.errors += 1
+            self._events.inc("errors")
             self.breaker.record_failure()
             return default
         self.breaker.record_success()
@@ -233,6 +289,28 @@ def resolve_request(guard: StoreGuard, req: SolveRequest,
     """
     t0 = time.perf_counter() if t0 is None else t0
     sig = sig if sig is not None else req.signature()
+    with trace.span("service.request", sig=sig[:12],
+                    graph=req.graph.name) as sp:
+        try:
+            res = _resolve_ladder(guard, req, sig, policy, max_workers,
+                                  warm_start, t0, sleep, attach_mesh)
+        except ServiceError as e:
+            sp.set(source="error")
+            record_resolution(sig, "error", time.perf_counter() - t0,
+                              degraded=True, reason=e.reason,
+                              deadline_s=req.deadline_s)
+            raise
+        sp.set(source=res.source, degraded=res.degraded)
+        record_resolution(sig, res.source, res.seconds,
+                          degraded=res.degraded, reason=res.error,
+                          deadline_s=req.deadline_s)
+        return res
+
+
+def _resolve_ladder(guard: StoreGuard, req: SolveRequest, sig: str,
+                    policy: Optional[RecoveryPolicy],
+                    max_workers: Optional[int], warm_start: bool,
+                    t0: float, sleep, attach_mesh: bool) -> ServiceResult:
     policy = policy if policy is not None else DEFAULT_RETRY_POLICY
     deadline_at = None if req.deadline_s is None else t0 + req.deadline_s
     decorate = attach_mesh_plan if attach_mesh else (lambda r, _: r)
@@ -263,6 +341,8 @@ def resolve_request(guard: StoreGuard, req: SolveRequest,
                 src = "warm"
                 if not sched.valid:
                     sched = None        # seed did not transfer: cold
+                    record_degrade(sig, "warm->cold",
+                                   "warm seed did not transfer")
             if sched is None:
                 src = "cold"
                 sched = solve(req.graph, req.hw, max_workers=max_workers,
@@ -276,6 +356,7 @@ def resolve_request(guard: StoreGuard, req: SolveRequest,
             last_err = e
             if attempts > policy.max_retries or expired():
                 break
+            record_degrade(sig, "retry", repr(e))
             sleep(min(backoff, policy.max_backoff))
             backoff *= policy.backoff_factor
         except Exception as e:          # poisoned request: no retry value
@@ -283,6 +364,9 @@ def resolve_request(guard: StoreGuard, req: SolveRequest,
             break
 
     # ladder floor: first-valid greedy, flagged degraded
+    record_degrade(sig, "greedy",
+                   repr(last_err) if last_err is not None
+                   else "deadline expired")
     try:
         sched = solve_greedy(req.graph, req.hw, max_workers=max_workers,
                              **req.opts)
@@ -324,8 +408,16 @@ class LocalClient:
         self.max_workers = max_workers
         self.warm_start = warm_start
         self.retry_policy = retry_policy
-        self.degraded = 0
-        self.errors = 0
+        self._events = metrics.CounterGroup("client",
+                                            ("degraded", "errors"))
+
+    @property
+    def degraded(self) -> int:
+        return self._events["degraded"]
+
+    @property
+    def errors(self) -> int:
+        return self._events["errors"]
 
     # -- single request ------------------------------------------------------
     def solve(self, graph: LayerGraph, hw: HWTemplate,
@@ -342,9 +434,10 @@ class LocalClient:
                                   max_workers=self.max_workers,
                                   warm_start=self.warm_start)
         except ServiceError:
-            self.errors += 1
+            self._events.inc("errors")
             raise
-        self.degraded += bool(res.degraded)
+        if res.degraded:
+            self._events.inc("degraded")
         return res
 
     # -- batched requests ----------------------------------------------------
@@ -435,12 +528,13 @@ class LocalClient:
                                   warm_start=self.warm_start, t0=t0,
                                   attach_mesh=False)
         except ServiceError as e:
-            self.errors += 1
+            self._events.inc("errors")
             from ..core.solver.kapla import _invalid_schedule
             return ServiceResult(
                 _invalid_schedule(req.graph, None), sig, "error",
                 time.perf_counter() - t0, degraded=True, error=str(e))
-        self.degraded += bool(res.degraded)
+        if res.degraded:
+            self._events.inc("degraded")
         return res
 
     def _warm_context(self, req: SolveRequest, sig: str):

@@ -39,12 +39,21 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from ..core.solver.kapla import solve_many
+from ..obs import metrics, trace
 from ..runtime.fault import CircuitBreaker, RecoveryPolicy
 from .client import (ServiceError, ServiceResult, SolveRequest, StoreGuard,
-                     attach_mesh_plan, resolve_request)
+                     attach_mesh_plan, record_degrade, record_resolution,
+                     resolve_request)
 from .store import ScheduleStore
 
 _STOP = object()
+
+_m_batch_width = metrics.histogram(
+    "server_batch_width", "requests coalesced into one batch window",
+    buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+_m_queue_wait = metrics.histogram(
+    "server_queue_wait_seconds",
+    "submit-to-batch-processing wait per request")
 
 
 class SolveServer:
@@ -66,14 +75,42 @@ class SolveServer:
         self._queue_loop = None
         self._stopped_loop = None
         self._inflight: Dict[str, asyncio.Future] = {}
-        self.requests = 0
-        self.coalesced = 0
-        self.batches = 0
-        self.solved = 0
-        self.degraded = 0
-        self.errors = 0
-        self.batch_faults = 0
-        self.isolated = 0
+        # mirrored into server_events_total{event=...} (repro.obs)
+        self._events = metrics.CounterGroup("server", (
+            "requests", "coalesced", "batches", "solved", "degraded",
+            "errors", "batch_faults", "isolated"))
+
+    @property
+    def requests(self) -> int:
+        return self._events["requests"]
+
+    @property
+    def coalesced(self) -> int:
+        return self._events["coalesced"]
+
+    @property
+    def batches(self) -> int:
+        return self._events["batches"]
+
+    @property
+    def solved(self) -> int:
+        return self._events["solved"]
+
+    @property
+    def degraded(self) -> int:
+        return self._events["degraded"]
+
+    @property
+    def errors(self) -> int:
+        return self._events["errors"]
+
+    @property
+    def batch_faults(self) -> int:
+        return self._events["batch_faults"]
+
+    @property
+    def isolated(self) -> int:
+        return self._events["isolated"]
 
     def _q(self) -> asyncio.Queue:
         # asyncio.Queue binds to the loop it is first awaited on; a server
@@ -93,14 +130,14 @@ class SolveServer:
         ``ServiceError`` if the request fails terminally, or
         ``RuntimeError`` if the server's loop on this event loop has
         already stopped — the request would otherwise never be drained."""
-        self.requests += 1
+        self._events.inc("requests")
         q = self._q()              # also rebinds in-flight map on new loops
         if self._stopped_loop is asyncio.get_running_loop():
             raise RuntimeError("SolveServer is stopped on this event loop")
         sig = req.signature()
         fut = self._inflight.get(sig)
         if fut is not None:
-            self.coalesced += 1
+            self._events.inc("coalesced")
             return await self._decorated(fut, req)
         fut = asyncio.get_running_loop().create_future()
         self._inflight[sig] = fut
@@ -165,7 +202,7 @@ class SolveServer:
                        fut: asyncio.Future, ts: float) -> None:
         """Resolve one request independently (the failure-isolation /
         deadline path): full ladder, typed terminal error."""
-        self.isolated += 1
+        self._events.inc("isolated")
         loop = asyncio.get_running_loop()
         try:
             res = await loop.run_in_executor(
@@ -175,29 +212,36 @@ class SolveServer:
                     warm_start=self.warm_start, t0=ts,
                     attach_mesh=False))   # shared future: per-awaiter
         except ServiceError as e:
-            self.errors += 1
+            self._events.inc("errors")
             if not fut.done():
                 fut.set_exception(e)
         except Exception as e:          # defensive: always a typed error
-            self.errors += 1
+            self._events.inc("errors")
             if not fut.done():
                 fut.set_exception(ServiceError(
                     f"request {sig[:12]} failed: {e!r}", signature=sig,
                     reason=repr(e)))
         else:
-            self.solved += 1
-            self.degraded += bool(res.degraded)
+            self._events.inc("solved")
+            if res.degraded:
+                self._events.inc("degraded")
             if not fut.done():
                 fut.set_result(res)
         finally:
             self._inflight.pop(sig, None)
 
     async def _process(self, batch: List[Tuple]) -> None:
-        self.batches += 1
+        self._events.inc("batches")
         t0 = time.perf_counter()
+        _m_batch_width.observe(len(batch))
+        with trace.span("service.batch", width=len(batch)):
+            await self._process_batch(batch, t0)
+
+    async def _process_batch(self, batch: List[Tuple], t0: float) -> None:
         loop = asyncio.get_running_loop()
         misses: List[Tuple[str, SolveRequest, asyncio.Future, float]] = []
         for sig, req, fut, ts in batch:
+            _m_queue_wait.observe(t0 - ts)
             if fut.done():
                 continue
             # store reads parse whole schedule records: keep the disk +
@@ -210,8 +254,11 @@ class SolveServer:
                 # undecorated: the future may be shared by coalesced
                 # requests with different node counts — each awaiter
                 # attaches its own placement (``submit``)
+                seconds = time.perf_counter() - ts
+                record_resolution(sig, "cached", seconds,
+                                  deadline_s=req.deadline_s)
                 fut.set_result(ServiceResult(
-                    cached, sig, "cached", time.perf_counter() - ts))
+                    cached, sig, "cached", seconds))
             else:
                 misses.append((sig, req, fut, ts))
         if not misses:
@@ -247,16 +294,19 @@ class SolveServer:
                 # request must not fail the whole coalesced batch — each
                 # member re-resolves independently and only the failing
                 # request's future carries its (typed) error
-                self.batch_faults += 1
+                self._events.inc("batch_faults")
+                trace.instant("service.batch_fault", width=len(pooled))
                 await asyncio.gather(*(
                     self._isolate(sig, req, fut, ts)
                     for sig, req, fut, ts in pooled))
                 continue
             for (sig, req, fut, ts), sched, src in zip(pooled, schedules,
                                                        sources):
-                self.solved += 1
+                self._events.inc("solved")
                 if src == "warm" and not sched.valid:
                     # seed did not transfer: fall back to a cold solve
+                    record_degrade(sig, "warm->cold",
+                                   "warm seed did not transfer")
                     try:
                         sched = await loop.run_in_executor(
                             None, lambda: solve_many(
@@ -264,7 +314,7 @@ class SolveServer:
                                 max_workers=self.max_workers,
                                 **dict(opt_key))[0])
                     except Exception:
-                        self.solved -= 1
+                        self._events.inc("solved", -1)
                         await self._isolate(sig, req, fut, ts)
                         continue
                     src = "cold"
@@ -277,8 +327,11 @@ class SolveServer:
                         None, lambda s=sched, r=req, g=sig:
                         self.guard.put(s, r.graph, r.hw, r.opts, sig=g))
                 if not fut.done():
+                    seconds = time.perf_counter() - ts
+                    record_resolution(sig, src, seconds,
+                                      deadline_s=req.deadline_s)
                     fut.set_result(ServiceResult(
-                        sched, sig, src, time.perf_counter() - ts, rec))
+                        sched, sig, src, seconds, rec))
                 self._inflight.pop(sig, None)
 
     def stats(self) -> Dict:

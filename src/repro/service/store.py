@@ -55,6 +55,7 @@ from typing import Dict, List, Mapping, Optional, Sequence
 
 from ..core.solver.kapla import NetworkSchedule
 from ..hw.template import HWTemplate
+from ..obs import metrics
 from ..runtime import inject
 from ..workloads.layers import LayerGraph
 from .signature import family_signature, schedule_signature, solver_options
@@ -139,14 +140,12 @@ class ScheduleStore:
         self.quarantine_dir = os.path.join(root, "quarantine")
         os.makedirs(self.records_dir, exist_ok=True)
         self.max_entries = max_entries
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.warm_hits = 0
-        self.corrupt = 0
-        self.quarantined = 0
-        self.io_errors = 0
-        self.rebuilds = 0
+        # per-instance counters mirrored into the process registry as
+        # store_events_total{event=...} (repro.obs.metrics)
+        self._events = metrics.CounterGroup("store", (
+            "reads", "writes", "hits", "misses", "evictions",
+            "warm_hits", "corrupt", "quarantined", "io_errors",
+            "rebuilds"))
         # family -> [signatures], replayed from the index, filtered to
         # records that still exist (evicted entries drop out naturally)
         self._family: Dict[str, List[str]] = {}
@@ -154,6 +153,39 @@ class ScheduleStore:
         damaged = self._replay_index()
         if damaged or (len(self) > 0 and not os.path.exists(self.index_path)):
             self.rebuild_index()
+
+    # -- counter views (the numbers live in obs.metrics via CounterGroup) ----
+    @property
+    def hits(self) -> int:
+        return self._events["hits"]
+
+    @property
+    def misses(self) -> int:
+        return self._events["misses"]
+
+    @property
+    def evictions(self) -> int:
+        return self._events["evictions"]
+
+    @property
+    def warm_hits(self) -> int:
+        return self._events["warm_hits"]
+
+    @property
+    def corrupt(self) -> int:
+        return self._events["corrupt"]
+
+    @property
+    def quarantined(self) -> int:
+        return self._events["quarantined"]
+
+    @property
+    def io_errors(self) -> int:
+        return self._events["io_errors"]
+
+    @property
+    def rebuilds(self) -> int:
+        return self._events["rebuilds"]
 
     # -- signatures (convenience passthroughs) -------------------------------
     def signature(self, graph: LayerGraph, hw: HWTemplate,
@@ -197,13 +229,13 @@ class ScheduleStore:
 
     def _quarantine(self, sig: str) -> None:
         """Move a corrupt record aside (never silently re-read it)."""
-        self.corrupt += 1
+        self._events.inc("corrupt")
         path = self._rec_path(sig)
         try:
             os.makedirs(self.quarantine_dir, exist_ok=True)
             os.replace(path, os.path.join(self.quarantine_dir,
                                           f"{sig}.json"))
-            self.quarantined += 1
+            self._events.inc("quarantined")
         except OSError:
             # quarantine is best-effort; at worst the next read re-detects
             pass
@@ -267,7 +299,7 @@ class ScheduleStore:
             _atomic_write(self.index_path, "".join(entries))
         except OSError as e:
             raise StoreError(f"index rebuild failed: {e}") from e
-        self.rebuilds += 1
+        self._events.inc("rebuilds")
         return len(entries)
 
     def _index_append(self, entry: Dict) -> None:
@@ -290,17 +322,18 @@ class ScheduleStore:
         try:
             spec = inject.maybe_fault("store.read", key=sig)
         except inject.InjectedFault as e:
-            self.io_errors += 1
+            self._events.inc("io_errors")
             raise StoreError(str(e)) from e
         if spec is not None and spec.kind == "corrupt":
             inject.truncate_file(path)
+        self._events.inc("reads")
         try:
             with open(path) as f:
                 d = json.load(f)
         except FileNotFoundError:
             return None
         except OSError as e:
-            self.io_errors += 1
+            self._events.inc("io_errors")
             raise StoreError(f"record read failed: {e}") from e
         except ValueError as e:
             raise _Corrupt(f"unparseable record {sig[:12]}: {e}") from e
@@ -318,12 +351,12 @@ class ScheduleStore:
             rec = self._read_record(sig)
         except _Corrupt:
             self._quarantine(sig)
-            self.misses += 1
+            self._events.inc("misses")
             return None
         if rec is None:
-            self.misses += 1
+            self._events.inc("misses")
             return None
-        self.hits += 1
+        self._events.inc("hits")
         path = self._rec_path(sig)
         now = time.time()
         try:
@@ -393,14 +426,15 @@ class ScheduleStore:
         try:
             spec = inject.maybe_fault("store.write", key=sig)
         except inject.InjectedFault as e:
-            self.io_errors += 1
+            self._events.inc("io_errors")
             raise StoreError(str(e)) from e
         path = self._rec_path(sig)
         try:
             _atomic_write(path, json.dumps(d, indent=1))
         except OSError as e:
-            self.io_errors += 1
+            self._events.inc("io_errors")
             raise StoreError(f"record write failed: {e}") from e
+        self._events.inc("writes")
         if spec is not None and spec.kind == "corrupt":
             inject.truncate_file(path)          # writer killed mid-put
         self._index_append({"sig": sig, "family": family,
@@ -431,7 +465,7 @@ class ScheduleStore:
             if rec is not None:
                 out.append(rec)
         if out:
-            self.warm_hits += 1
+            self._events.inc("warm_hits")
         return out
 
     # -- eviction ------------------------------------------------------------
@@ -445,7 +479,7 @@ class ScheduleStore:
         for p in paths[:len(paths) - self.max_entries]:
             try:
                 os.unlink(p)
-                self.evictions += 1
+                self._events.inc("evictions")
             except OSError:
                 pass
         # drop evicted sigs from the family map

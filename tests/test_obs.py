@@ -1,0 +1,512 @@
+"""Observability layer: trace/metrics primitives, the instrumented
+degradation + mesh-fault ladders (every rung must emit a structured
+event with a reason), re-homed stats views, drift histogram, CLIs."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.solver import memo, solve
+from repro.core.solver.multinode import NodeMesh, plan_multinode
+from repro.lower.calibrate import default_hw
+from repro.lower.meshexec import MeshExecutor, SegmentTask
+from repro.lower.netexec import record_latency_drift
+from repro.obs import metrics, trace
+from repro.obs.metrics import REGISTRY, CounterGroup, Registry
+from repro.runtime.inject import FaultPlan, FaultSpec, inject
+from repro.runtime.straggler import StragglerDetector
+from repro.service import LocalClient, ScheduleStore
+from repro.workloads.nets import get_net
+
+HW = default_hw()
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts and ends in the production default: metrics on,
+    tracing off (a leaked tracer would couple tests)."""
+    trace.disable()
+    obs.on()
+    yield
+    trace.disable()
+    obs.on()
+
+
+@pytest.fixture(scope="module")
+def solved():
+    net = get_net("mlp", batch=4)
+    sched = solve(net, HW, max_seg_len=2)
+    assert sched.valid
+    return net, sched
+
+
+# ---------------------------------------------------------------------------
+# trace primitives
+# ---------------------------------------------------------------------------
+
+def test_span_disabled_is_shared_noop():
+    assert not trace.enabled()
+    sp = trace.span("x.y", a=1)
+    assert sp is trace.NOOP_SPAN        # no allocation while disabled
+    with sp as s:
+        s.set(b=2)                      # swallowed
+    trace.instant("x.z", c=3)           # no-op, no error
+
+
+def test_span_records_timing_thread_and_attrs():
+    t = trace.enable()
+    try:
+        with trace.span("unit.op", fixed="yes") as sp:
+            sp.set(late=7)
+        trace.instant("unit.mark", why="because")
+    finally:
+        trace.disable()
+    (ev,) = t.find("unit.op")
+    assert ev["ph"] == "X" and ev["dur"] >= 0
+    assert ev["args"] == {"fixed": "yes", "late": 7}
+    assert ev["tid"] == threading.get_ident()
+    (mark,) = t.find("unit.mark")
+    assert mark["ph"] == "i" and mark["args"]["why"] == "because"
+    assert t.counts() == {"unit.op": 1, "unit.mark": 1}
+
+
+def test_span_annotates_exceptions_and_still_records():
+    t = trace.enable()
+    try:
+        with pytest.raises(ValueError):
+            with trace.span("unit.boom"):
+                raise ValueError("nope")
+    finally:
+        trace.disable()
+    (ev,) = t.find("unit.boom")
+    assert ev["args"]["error"] == "ValueError"
+
+
+def test_tracing_scope_exports_chrome_json(tmp_path):
+    path = str(tmp_path / "t.json")
+    with trace.tracing(path):
+        with trace.span("a.b", k="v"):
+            pass
+        trace.instant("a.mark")
+    assert not trace.enabled()          # scope closed the tracer
+    events = trace.load_events(path)
+    phases = {e["ph"] for e in events}
+    assert phases == {"X", "i", "M"}    # spans, instants, thread names
+    x = next(e for e in events if e["ph"] == "X")
+    assert x["name"] == "a.b" and x["cat"] == "a"
+    assert x["ts"] >= 0 and "dur" in x  # µs fields Perfetto needs
+    summ = trace.summarize_events(events)
+    assert summ["spans"]["a.b"]["count"] == 1
+    assert summ["instants"]["a.mark"] == 1
+    assert summ["threads"]
+
+
+def test_tracing_scope_exports_even_on_error(tmp_path):
+    path = str(tmp_path / "crash.json")
+    with pytest.raises(RuntimeError):
+        with trace.tracing(path):
+            with trace.span("a.b"):
+                pass
+            raise RuntimeError("chaos")
+    assert trace.summarize_events(
+        trace.load_events(path))["spans"]["a.b"]["count"] == 1
+
+
+def test_tracer_drops_past_max_events():
+    t = trace.Tracer()
+    t.max_events = 3
+    for i in range(5):
+        t.instant(f"e{i}")
+    assert len(t.events) == 3 and t.dropped == 2
+
+
+# ---------------------------------------------------------------------------
+# metrics primitives
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_histogram_semantics():
+    r = Registry()
+    c = r.counter("c_total", "c", ("kind",))
+    c.inc(kind="a")
+    c.inc(2, kind="a")
+    c.inc(kind="b")
+    assert c.value(kind="a") == 3 and c.value(kind="b") == 1
+    g = r.gauge("g", "g")
+    g.set(5)
+    g.dec(2)
+    assert g.value() == 3
+    h = r.histogram("h_seconds", "h", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    (s,) = h.series()
+    assert s["count"] == 3 and s["sum"] == pytest.approx(5.55)
+    assert s["buckets"] == {"0.1": 1, "1.0": 2, "+Inf": 3}  # cumulative
+
+
+def test_metric_label_mismatch_raises():
+    r = Registry()
+    c = r.counter("c_total", "c", ("kind",))
+    with pytest.raises(ValueError):
+        c.inc()                         # missing declared label
+    with pytest.raises(ValueError):
+        c.inc(kind="a", extra="b")
+
+
+def test_registry_idempotent_but_redeclare_raises():
+    r = Registry()
+    assert r.counter("x_total", "", ("a",)) is \
+        r.counter("x_total", "", ("a",))
+    with pytest.raises(ValueError):
+        r.gauge("x_total")              # same name, different kind
+    with pytest.raises(ValueError):
+        r.counter("x_total", "", ("b",))    # different labelset
+    snap = r.snapshot()
+    assert snap["x_total"]["kind"] == "counter"
+
+
+def test_prometheus_exposition_format():
+    r = Registry()
+    r.counter("req_total", "requests", ("source",)).inc(source="cold")
+    r.histogram("lat_seconds", "latency", buckets=(1.0,)).observe(0.5)
+    text = r.exposition()
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{source="cold"} 1.0' in text
+    assert 'lat_seconds_bucket{le="1.0"} 1' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 1' in text
+    assert "lat_seconds_count 1" in text
+
+
+def test_off_switch_skips_all_updates():
+    r = Registry()
+    c = r.counter("c_total")
+    h = r.histogram("h_seconds")
+    metrics.set_off(True)
+    try:
+        c.inc()
+        h.observe(1.0)
+    finally:
+        metrics.set_off(False)
+    assert c.value() == 0 and h.value() == 0
+    c.inc()
+    assert c.value() == 1               # back on
+
+
+def test_counter_group_mirrors_into_shared_counter():
+    r = Registry()
+    g1 = CounterGroup("unit", ("hits", "misses"), registry=r)
+    g2 = CounterGroup("unit", ("hits", "misses"), registry=r)
+    g1.inc("hits")
+    g1.inc("misses", 2)
+    g2.inc("hits", 3)
+    assert g1["hits"] == 1 and g2["hits"] == 3      # per-instance views
+    assert g1.view() == {"hits": 1, "misses": 2}
+    shared = r.get("unit_events_total")             # union across instances
+    assert shared.value(event="hits") == 4
+    assert shared.value(event="misses") == 2
+    with pytest.raises(KeyError):
+        g1.inc("undeclared")
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: every rung emits service.resolved with a reason
+# ---------------------------------------------------------------------------
+
+def _resolved(t, source):
+    evs = [e for e in t.find("service.resolved")
+           if e["args"]["source"] == source]
+    assert evs, f"no service.resolved event for rung {source!r}: " \
+        f"{[e['args'] for e in t.find('service.resolved')]}"
+    return evs[-1]["args"]
+
+
+def test_ladder_rungs_emit_resolved_events(tmp_path):
+    client = LocalClient(ScheduleStore(str(tmp_path)))
+    t = trace.enable()
+    try:
+        client.solve(get_net("mlp", batch=8), HW)           # cold
+        client.solve(get_net("mlp", batch=8), HW)           # cached
+        client.solve(get_net("mlp", batch=16), HW)          # warm
+        r = client.solve(get_net("mlp", batch=32), HW,
+                         deadline_s=0.0)                    # greedy floor
+    finally:
+        trace.disable()
+    assert r.source == "greedy"
+    for rung, why in (("cold", "full solve"), ("cached", "store hit"),
+                      ("warm", "family near-miss seed")):
+        args = _resolved(t, rung)
+        assert args["reason"] == why and not args["degraded"]
+        assert args["sig"]                  # request-identifying prefix
+    greedy = _resolved(t, "greedy")
+    assert greedy["degraded"]
+    # the drop itself is a separate structured event with the cause
+    drops = [e["args"] for e in t.find("service.degrade")
+             if e["args"]["rung"] == "greedy"]
+    assert drops and "deadline" in drops[-1]["reason"]
+    # every request span resolved its source attribute
+    spans = t.find("service.request")
+    assert {s["args"]["source"] for s in spans} == \
+        {"cold", "cached", "warm", "greedy"}
+
+
+def test_ladder_retry_and_exhaustion_events(tmp_path):
+    from repro.runtime.fault import RecoveryPolicy
+    from repro.service import ServiceError
+    plan = FaultPlan.make(
+        7, {"solve.segment": FaultSpec(rate=1.0, kind="error")})
+    client = LocalClient(
+        ScheduleStore(str(tmp_path)),
+        retry_policy=RecoveryPolicy(max_retries=2, backoff_seconds=0.0,
+                                    max_backoff=0.0))
+    t = trace.enable()
+    try:
+        with inject(plan):
+            with pytest.raises(ServiceError):
+                client.solve(get_net("mlp", batch=8), HW)
+    finally:
+        trace.disable()
+    assert t.find("fault.injected")         # chaos annotated into trace
+    retries = [e["args"] for e in t.find("service.degrade")
+               if e["args"]["rung"] == "retry"]
+    assert retries and "InjectedFault" in retries[0]["reason"]
+    err = _resolved(t, "error")
+    assert err["degraded"] and "InjectedFault" in err["reason"]
+
+
+def test_ladder_rung_counters_accumulate(tmp_path):
+    c = metrics.counter("service_requests_total",
+                        "requests answered, by resolved ladder rung",
+                        ("source",))
+    before = {s: c.value(source=s) for s in ("cold", "cached")}
+    client = LocalClient(ScheduleStore(str(tmp_path)))
+    client.solve(get_net("mlp", batch=8), HW)
+    client.solve(get_net("mlp", batch=8), HW)
+    assert c.value(source="cold") == before["cold"] + 1
+    assert c.value(source="cached") == before["cached"] + 1
+
+
+# ---------------------------------------------------------------------------
+# mesh fault ladder: every rung emits a reasoned event
+# ---------------------------------------------------------------------------
+
+def _synth_tasks(n, seconds_by_node=()):
+    tasks = []
+    for i in range(n):
+        def run(state, i=i):
+            name = threading.current_thread().name
+            for prefix, sec in seconds_by_node:
+                if name.startswith(prefix):
+                    import time
+                    time.sleep(sec)
+            return {f"t{i}": np.asarray(state.get(f"t{i-1}", 0) + i + 1)}
+        tasks.append(SegmentTask(i, (f"t{i-1}",) if i else (),
+                                 (f"t{i}",), run))
+    return tasks
+
+
+def test_mesh_straggler_and_backup_events():
+    from repro.core.solver.multinode import MultiNodePlan, NodeAssignment
+    plan = MultiNodePlan(
+        graph_name="synth", mesh=NodeMesh(nodes=2),
+        parts=(NodeAssignment(part=0, seg_start=0, seg_stop=1,
+                              node_ids=(0,), compute_cycles=1.0,
+                              energy_pj=1.0, inbound_bytes=0.0,
+                              inbound_hops=0, link_cycles=0.0,
+                              onchip_staged=True),
+               NodeAssignment(part=1, seg_start=1, seg_stop=2,
+                              node_ids=(1,), compute_cycles=1.0,
+                              energy_pj=1.0, inbound_bytes=0.0,
+                              inbound_hops=0, link_cycles=0.0,
+                              onchip_staged=True)),
+        bottleneck_cycles=1.0, latency_cycles=1.0, total_energy_pj=1.0,
+        link_bytes=0.0, est_cost=1.0)
+    det = StragglerDetector(factor=1.5, warmup=1)
+    for _ in range(3):
+        det.record("node1", 0.5)
+        det.record("node0", 0.01)
+    tasks = _synth_tasks(2, seconds_by_node=(("node1", 0.4),))
+    t = trace.enable()
+    try:
+        with MeshExecutor(plan, tasks, detector=det,
+                          min_backup_deadline_s=0.05) as ex:
+            r = ex.run({}, "r0")
+    finally:
+        trace.disable()
+    assert r.backups >= 1
+    (flag,) = t.find("mesh.straggler")
+    assert flag["args"]["node"] == 1 and "fleet median" in \
+        flag["args"]["reason"]
+    (race,) = t.find("mesh.backup_dispatch")
+    assert race["args"]["primary"] == 1 and race["args"]["backup"] == 0
+    assert race["args"]["winner"] == 0          # healthy peer won
+    assert "straggler" in race["args"]["reason"]
+
+
+@pytest.mark.chaos
+def test_mesh_crash_emits_kill_and_repartition_events(solved):
+    net, sched = solved
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4))
+    victim = plan.parts[0].node_ids[0]
+    faults = FaultPlan.make(1, {"node.crash": FaultSpec(
+        rate=1.0, match=f"node{victim}")})
+    t = trace.enable()
+    try:
+        with MeshExecutor(plan, _synth_tasks(plan.n_segments),
+                          schedule=sched, graph=net, hw=HW) as ex:
+            with inject(faults):
+                r = ex.run({}, "r0")
+    finally:
+        trace.disable()
+    assert not r.degraded and r.replays >= 1
+    kills = t.find("mesh.node_killed")
+    assert any(e["args"]["node"] == victim for e in kills)
+    (rep,) = t.find("mesh.repartition")
+    assert rep["args"]["dead"] == victim
+    assert rep["args"]["dirty_segments"] >= 1
+    assert rep["args"]["survivors"] == 3
+    assert rep["args"]["reason"]            # the NodeFailure text
+    assert t.find("fault.injected")
+    # the request span carries the recovery telemetry
+    (req,) = t.find("mesh.request")
+    assert req["args"]["replays"] >= 1 and not req["args"]["degraded"]
+
+
+def test_mesh_fallback_event_without_repartition_context():
+    from repro.core.solver.multinode import MultiNodePlan, NodeAssignment
+    plan = MultiNodePlan(
+        graph_name="synth", mesh=NodeMesh(nodes=2),
+        parts=(NodeAssignment(part=0, seg_start=0, seg_stop=1,
+                              node_ids=(0,), compute_cycles=1.0,
+                              energy_pj=1.0, inbound_bytes=0.0,
+                              inbound_hops=0, link_cycles=0.0,
+                              onchip_staged=True),
+               NodeAssignment(part=1, seg_start=1, seg_stop=2,
+                              node_ids=(1,), compute_cycles=1.0,
+                              energy_pj=1.0, inbound_bytes=0.0,
+                              inbound_hops=0, link_cycles=0.0,
+                              onchip_staged=True)),
+        bottleneck_cycles=1.0, latency_cycles=1.0, total_energy_pj=1.0,
+        link_bytes=0.0, est_cost=1.0)
+    t = trace.enable()
+    try:
+        with MeshExecutor(plan, _synth_tasks(2)) as ex:
+            ex.pool.kill(1, "chaos: manual kill")
+            r = ex.run({}, "r0")
+    finally:
+        trace.disable()
+    assert r.degraded
+    (kill,) = t.find("mesh.node_killed")
+    assert kill["args"] == {"node": 1, "reason": "chaos: manual kill"}
+    (fb,) = t.find("mesh.fallback")
+    assert "no re-partition context" in fb["args"]["reason"]
+    # the last rung runs inline on the driver, visible as its own row
+    assert any(e["args"]["node"] == "driver" for e in t.find("mesh.task"))
+
+
+# ---------------------------------------------------------------------------
+# re-homed stats() views + solver counters
+# ---------------------------------------------------------------------------
+
+def test_store_stats_rehomed_on_registry(tmp_path):
+    store = ScheduleStore(str(tmp_path))
+    shared = REGISTRY.get("store_events_total")
+    before = shared.value(event="misses")
+    client = LocalClient(store)
+    client.solve(get_net("mlp", batch=8), HW)
+    client.solve(get_net("mlp", batch=8), HW)
+    st = store.stats()
+    assert st["hits"] >= 1 and st["misses"] >= 1    # legacy shape intact
+    assert store.hits == st["hits"]                 # thin property view
+    assert shared.value(event="misses") > before    # mirrored globally
+
+
+def test_solver_counters_and_spans(tmp_path):
+    seg = metrics.counter("solver_segments_total",
+                          "segment solves, by outcome", ("outcome",))
+    cand = metrics.counter("solver_candidates_total",
+                           "DP chain candidates, by pruning stage",
+                           ("stage",))
+    memo.clear_all()
+    b_seg = sum(s["value"] for s in seg.series())
+    b_enum = cand.value(stage="enumerated")
+    t = trace.enable()
+    try:
+        sched = solve(get_net("mlp", batch=8), HW)
+    finally:
+        trace.disable()
+    assert sched.valid
+    assert sum(s["value"] for s in seg.series()) > b_seg
+    assert cand.value(stage="enumerated") > b_enum
+    assert cand.value(stage="enumerated") >= cand.value(stage="valid") \
+        >= cand.value(stage="kept")         # pruning funnel is monotone
+    counts = t.counts()
+    assert counts.get("solve.segment", 0) >= 1
+    assert counts.get("solve.dp", 0) >= 1
+    assert counts.get("dp.enumerate", 0) >= 1
+    memo_metric = REGISTRY.get("solver_memo_total")
+    assert memo_metric.value(cache="intra", outcome="miss") >= 1
+
+
+# ---------------------------------------------------------------------------
+# predicted-vs-measured drift
+# ---------------------------------------------------------------------------
+
+def test_latency_drift_histogram_and_event():
+    h = REGISTRY.get("latency_drift_ratio")
+    before = h.value(source="unit")
+    t = trace.enable()
+    try:
+        ratio = record_latency_drift(0.010, 0.012, source="unit")
+    finally:
+        trace.disable()
+    assert ratio == pytest.approx(1.2)
+    assert h.value(source="unit") == before + 1
+    (ev,) = t.find("netexec.latency_drift")
+    assert ev["args"]["source"] == "unit"
+    assert ev["args"]["ratio"] == pytest.approx(1.2, abs=1e-3)
+    # degenerate inputs are refused, not observed
+    assert record_latency_drift(0.0, 1.0, source="unit") is None
+    assert record_latency_drift(1.0, float("nan"), source="unit") is None
+    assert h.value(source="unit") == before + 1
+
+
+# ---------------------------------------------------------------------------
+# CLIs
+# ---------------------------------------------------------------------------
+
+def test_obs_cli_summarize_and_metrics(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    path = str(tmp_path / "t.json")
+    with trace.tracing(path):
+        with trace.span("a.b"):
+            pass
+        trace.instant("a.mark", reason="x")
+    assert main(["summarize", path]) == 0
+    out = capsys.readouterr().out
+    assert "a.b" in out and "a.mark" in out and "Perfetto" in out
+    assert main(["summarize", path, "--json"]) == 0
+    summ = json.loads(capsys.readouterr().out)
+    assert summ["spans"]["a.b"]["count"] == 1
+    metrics.counter("unit_cli_total").inc()
+    assert main(["metrics"]) == 0
+    assert "unit_cli_total" in capsys.readouterr().out
+    assert main(["metrics", "--prom"]) == 0
+    assert "unit_cli_total 1.0" in capsys.readouterr().out
+
+
+def test_service_cli_stats_json_and_prom(tmp_path, capsys):
+    from repro.service.__main__ import main
+    root = str(tmp_path / "store")
+    assert main(["solve", "--net", "mlp", "--batch", "8",
+                 "--store-dir", root]) == 0
+    capsys.readouterr()
+    assert main(["stats", "--store-dir", root, "--json"]) == 0
+    d = json.loads(capsys.readouterr().out)
+    assert d["store"]["entries"] == 1
+    assert "service_requests_total" in d["metrics"]
+    assert "store_events_total" in d["metrics"]
+    assert main(["stats", "--store-dir", root, "--prom"]) == 0
+    text = capsys.readouterr().out
+    assert "# TYPE service_requests_total counter" in text
+    assert "service_request_seconds_bucket" in text
