@@ -201,16 +201,65 @@ def bench_solve(hw, nets, batch: int) -> dict:
     return out
 
 
-def bench_network(quick: bool) -> dict:
+def _bench_fused(quick: bool) -> dict:
+    """Fused-vs-interpret timing: the same ``NetworkPlan`` executed
+    layer-by-layer in Pallas interpret mode and as fused compiled
+    segments (min-of-N after a warm-up run each).  mlp + transformer2
+    keep the interpret side affordable; their speedups feed the
+    ``--min-fused-speedup`` regression gate."""
+    import jax
+    from repro.core.solver import solve
+    from repro.lower import (lower_network, make_network_inputs,
+                             network_runner)
+    from repro.lower.calibrate import default_hw
+    from repro.lower.fuse import cache_stats
+    from repro.workloads.nets import get_net, transformer
+
+    hw = default_hw()
+    iters = 2 if quick else 3
+    out = {"iters": iters, "nets": []}
+    for net in [get_net("mlp", batch=4), transformer(batch=8, layers=2)]:
+        sched = solve(net, hw)
+        nplan = lower_network(sched, net, hw)
+        inputs = make_network_inputs(nplan, 0)
+        run_i = network_runner(nplan, inputs, jit=True, backend="interpret")
+        run_c = network_runner(nplan, inputs, jit=True, backend="compiled",
+                               keep="boundary")
+
+        def best(run):
+            jax.block_until_ready(run().outputs)        # warm-up/compile
+            b = float("inf")
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run().outputs)
+                b = min(b, time.perf_counter() - t0)
+            return b
+
+        ti, tc = best(run_i), best(run_c)
+        out["nets"].append({
+            "net": net.name,
+            "interpret_seconds": ti,
+            "compiled_seconds": tc,
+            "speedup": ti / tc,
+        })
+    out["min_speedup"] = min(e["speedup"] for e in out["nets"])
+    out["executable_cache"] = cache_stats()
+    return out
+
+
+def bench_network(quick: bool, backend: str = "interpret") -> dict:
     """Network-tier pipeline: solve -> lower_network -> execute_network ->
-    measure, per net (repro.lower.calibrate.run_network_calibration).  The
-    full per-net record goes to BENCH_network.json next to the other perf
+    measure, per net (repro.lower.calibrate.run_network_calibration) on
+    ``backend``, plus the fused-vs-interpret comparison.  The full
+    per-net record goes to BENCH_network.json next to the other perf
     records; the main record keeps a summary."""
     from repro.lower.calibrate import run_network_calibration, save_record
     t0 = time.perf_counter()
     # 3 timed iters on the full sweep: the smallest nets run in ~0.3 s and
     # a single polluted sample can reorder them (the spearman gate)
-    rec = run_network_calibration(quick=quick, iters=1 if quick else 3)
+    rec = run_network_calibration(quick=quick, iters=1 if quick else 3,
+                                  backend=backend)
+    rec["fused"] = _bench_fused(quick)
     rec["sweep_seconds"] = time.perf_counter() - t0
     save_record(rec, os.path.join(REPO_ROOT, "BENCH_network.json"))
     # include nets the sweep excluded for numerics, so --max-network-rel-err
@@ -219,12 +268,14 @@ def bench_network(quick: bool) -> dict:
         [s["max_rel_err"] for s in rec["skipped"] if "max_rel_err" in s]
     worst_err = max(errs, default=float("inf"))
     return {
+        "backend": backend,
         "n_nets": rec["n_nets"],
         "n_skipped": len(rec["skipped"]),
         "nets": [e["net"] for e in rec["nets"]],
         "spearman_network": rec.get("spearman_network"),
         "worst_rel_err": worst_err,
         "total_forwarded": sum(e["n_forwarded"] for e in rec["nets"]),
+        "fused": rec["fused"],
         "sweep_seconds": rec["sweep_seconds"],
     }
 
@@ -765,6 +816,15 @@ def main(argv=None) -> int:
     ap.add_argument("--min-network-spearman", type=float, default=None,
                     help="exit nonzero if network-level predicted-vs-"
                     "measured Spearman is below this")
+    ap.add_argument("--backend", default="interpret",
+                    choices=["interpret", "pallas", "compiled"],
+                    help="execution backend for the network sweep "
+                    "(BENCH_network.json records it; the fused-vs-"
+                    "interpret comparison always runs both)")
+    ap.add_argument("--min-fused-speedup", type=float, default=None,
+                    help="exit nonzero if fused compiled execution is "
+                    "not at least this many times faster than "
+                    "layer-by-layer interpret on every comparison net")
     ap.add_argument("--service", action="store_true",
                     help="also run the schedule-service sweep (writes "
                     "BENCH_service.json)")
@@ -844,7 +904,7 @@ def main(argv=None) -> int:
                   "calibration": bench_calibration(args.quick)}
     elif args.network_only:
         record = {"quick": args.quick,
-                  "network": bench_network(args.quick)}
+                  "network": bench_network(args.quick, args.backend)}
     elif args.service_only:
         record = {"quick": args.quick,
                   "service": bench_service(args.quick)}
@@ -869,7 +929,7 @@ def main(argv=None) -> int:
         if args.calibrate:
             record["calibration"] = bench_calibration(args.quick)
         if args.network:
-            record["network"] = bench_network(args.quick)
+            record["network"] = bench_network(args.quick, args.backend)
         if args.service:
             record["service"] = bench_service(args.quick)
         if args.chaos:
@@ -929,6 +989,14 @@ def main(argv=None) -> int:
         elif nw["spearman_network"] < args.min_network_spearman:
             fails.append(f"network spearman {nw['spearman_network']:.3f} < "
                          f"{args.min_network_spearman}")
+    if args.min_fused_speedup is not None:
+        if nw is None:
+            fails.append("fused speedup gate set but sweep did not run "
+                         "(pass --network)")
+        elif nw["fused"]["min_speedup"] < args.min_fused_speedup:
+            worst = min(nw["fused"]["nets"], key=lambda e: e["speedup"])
+            fails.append(f"fused speedup {worst['speedup']:.1f}x on "
+                         f"{worst['net']} < {args.min_fused_speedup}x")
     sv = record.get("service")
     if args.min_service_cached_speedup is not None:
         if sv is None:

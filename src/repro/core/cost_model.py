@@ -62,6 +62,7 @@ class Calibration:
     intercept: float = 0.0
     spearman: float = 0.0
     n_pairs: int = 0
+    backend: str = "interpret"     # execution backend the fit measured
 
     def to_json_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -72,26 +73,57 @@ class Calibration:
         return Calibration(**{k: v for k, v in d.items() if k in fields})
 
 
-_calibration: Optional[Calibration] = None
+# One fitted Calibration per execution backend (interpreter seconds and
+# compiled-XLA seconds are different units — a fit from one must never
+# price the other), plus the *active* backend ``predicted_seconds``
+# consults by default.
+_calibrations: Dict[str, Calibration] = {}
+_active_backend: Optional[str] = None
 
 
-def set_calibration(cal: Optional[Calibration]) -> None:
-    """Install (or clear, with None) the process-wide calibration used by
-    ``predicted_seconds``.  The cycle-level model and all parity paths are
-    unaffected — calibration only rescales cycles into wall seconds."""
-    global _calibration
-    _calibration = cal
+def set_calibration(cal: Optional[Calibration],
+                    backend: Optional[str] = None) -> None:
+    """Install a calibration for its backend and make that backend the
+    active one (or clear everything, with None).  The cycle-level model
+    and all parity paths are unaffected — calibration only rescales
+    cycles into wall seconds."""
+    global _active_backend
+    if cal is None:
+        if backend is None:
+            _calibrations.clear()
+            _active_backend = None
+        else:
+            _calibrations.pop(backend, None)
+            if _active_backend == backend:
+                _active_backend = None
+        return
+    backend = backend if backend is not None else cal.backend
+    _calibrations[backend] = cal
+    _active_backend = backend
 
 
-def get_calibration() -> Optional[Calibration]:
-    return _calibration
+def get_calibration(backend: Optional[str] = None) -> Optional[Calibration]:
+    """The installed calibration for ``backend`` (the active backend's
+    when None)."""
+    if backend is None:
+        backend = _active_backend
+    return _calibrations.get(backend) if backend is not None else None
 
 
-def load_calibration(path: str) -> Calibration:
+def load_calibration(path: str,
+                     backend: Optional[str] = None) -> Calibration:
+    """Load a calibration record (``BENCH_calibration.json`` shape) and
+    install it under its backend — the record's ``backend`` field wins
+    unless overridden, so a compiled-backend sweep loads as compiled
+    coefficients, never mislabeled as interpreter ones."""
     import json
     with open(path) as f:
         d = json.load(f)
-    cal = Calibration.from_json_dict(d.get("calibration", d))
+    cal = Calibration.from_json_dict({
+        "backend": d.get("backend", "interpret"),
+        **d.get("calibration", d)})
+    if backend is not None:
+        cal = dataclasses.replace(cal, backend=backend)
     set_calibration(cal)
     return cal
 
@@ -112,13 +144,16 @@ def cycle_terms(cb: "CostBreakdown", macs: float, hw: HWTemplate
 
 def predicted_seconds(cb: "CostBreakdown", macs: float, hw: HWTemplate,
                       grid_steps: int = 0,
-                      cal: Optional[Calibration] = None) -> float:
+                      cal: Optional[Calibration] = None,
+                      backend: Optional[str] = None) -> float:
     """Wall-clock latency prediction: calibrated when a ``Calibration`` is
-    installed (or passed), otherwise raw cycles over the clock.  Invalid
-    breakdowns predict inf (mirroring the batched path's valid-lane mask)."""
+    installed (or passed), otherwise raw cycles over the clock.  With
+    ``backend`` the per-backend fit is consulted (e.g. compiled-backend
+    coefficients instead of interpreter ones); invalid breakdowns predict
+    inf (mirroring the batched path's valid-lane mask)."""
     if not cb.valid:
         return float("inf")
-    cal = cal if cal is not None else _calibration
+    cal = cal if cal is not None else get_calibration(backend)
     if cal is None:
         return cb.latency_cycles / hw.freq_hz
     t = cycle_terms(cb, macs, hw)

@@ -1,0 +1,87 @@
+"""Backend selection — the single source of truth for interpret-vs-compiled.
+
+Two tiers of the stack used to carry their own ad-hoc flags: the kernel
+API (``kernels.ops``) dispatched on an ``impl`` string with a private
+``_on_tpu()`` probe, and the lowering tier (``lower.exec`` /
+``lower.netexec``) threaded a bare ``interpret: bool``.  Both now resolve
+through this module, so "what actually runs" is decided in exactly one
+place:
+
+kernel-impl tier (``kernels.ops``: attention / ssd wrappers)
+    ``resolve_impl("auto")`` -> ``"pallas"`` on TPU, ``"jnp"`` elsewhere.
+
+execution-backend tier (``lower.exec`` / ``lower.netexec`` / ``lower.fuse``)
+    =============  ========================================================
+    ``interpret``  per-layer ``pl.pallas_call(interpret=True)`` — the
+                   bit-accuracy **oracle**; runs everywhere, slowly.
+    ``pallas``     per-layer compiled ``pl.pallas_call`` — TPU silicon.
+    ``compiled``   fused XLA segments (``lower.fuse``): every kernel of a
+                   chain segment traced into **one** jitted executable —
+                   the default measured path.
+    =============  ========================================================
+
+``resolve_backend`` also accepts the legacy ``interpret`` bool so existing
+call sites keep their meaning: ``interpret=True`` -> ``"interpret"``,
+``interpret=False`` -> ``"pallas"``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+#: execution backends of the lowering tier (see module docstring)
+BACKENDS = ("interpret", "pallas", "compiled")
+
+#: the default measured path: fused XLA segments, fast on every platform
+DEFAULT_BACKEND = "compiled"
+
+#: the numerics oracle every other backend is verified against
+ORACLE_BACKEND = "interpret"
+
+
+def on_tpu() -> bool:
+    """True when jax's default backend is a TPU."""
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def default_impl() -> str:
+    """Kernel-impl default: Pallas TPU kernels on TPU, pure-jnp elsewhere."""
+    return "pallas" if on_tpu() else "jnp"
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Resolve a kernel ``impl`` string (``kernels.ops`` dispatch)."""
+    return default_impl() if impl == "auto" else impl
+
+
+def resolve_backend(backend: Optional[str] = None,
+                    interpret: Optional[bool] = None) -> str:
+    """Resolve an execution backend name for the lowering tier.
+
+    ``backend`` wins when given; otherwise the legacy ``interpret`` bool
+    maps to its historical meaning; with neither, the default measured
+    path (``compiled``) is chosen.
+    """
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one "
+                             f"of {BACKENDS}")
+        return backend
+    if interpret is not None:
+        return "interpret" if interpret else "pallas"
+    return DEFAULT_BACKEND
+
+
+def backend_interprets(backend: str) -> bool:
+    """Whether per-layer pallas_calls under this backend interpret (the
+    flag handed through to ``pl.pallas_call``)."""
+    return backend == "interpret"
+
+
+__all__ = ["BACKENDS", "DEFAULT_BACKEND", "ORACLE_BACKEND", "on_tpu",
+           "default_impl", "resolve_impl", "resolve_backend",
+           "backend_interprets"]

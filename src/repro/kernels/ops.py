@@ -11,15 +11,13 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .backend import on_tpu, resolve_impl
 from .flash_attention import flash_attention
 from .ssd_scan import ssd_intra_chunk
 
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
+# kept as an alias: external callers probed this before the shared
+# backend-selection helper (kernels.backend) became the source of truth
+_on_tpu = on_tpu
 
 
 # ---------------------------------------------------------------------------
@@ -171,8 +169,7 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
               logit_softcap: float = 0.0, scale: Optional[float] = None,
               impl: str = "auto") -> jnp.ndarray:
     """Multi-head GQA attention.  q: [B,H,S,D]; k,v: [B,KV,S,D]."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
+    impl = resolve_impl(impl)
     if impl == "pallas":
         return flash_attention(q, k, v, causal=causal, window=window,
                                logit_softcap=logit_softcap, scale=scale)
@@ -300,8 +297,8 @@ def ssd(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
                          c_c, h0, jnp.exp(acum))
 
     # intra-chunk quadratic term: Pallas kernel on TPU, jnp otherwise
-    use_kernel = impl == "pallas" or (impl == "auto" and _on_tpu())
-    if use_kernel or impl == "pallas_interpret":
+    impl = resolve_impl(impl)
+    if impl in ("pallas", "pallas_interpret"):
         xk = jnp.moveaxis(x_c, 3, 1)                          # [B,H,NC,Lc,P]
         dtk = jnp.moveaxis(dt_c, 3, 1)
         acumk = jnp.moveaxis(acum, 3, 1)

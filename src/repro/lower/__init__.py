@@ -11,8 +11,14 @@ measured runtimes — at two tiers:
           -> netplan.lower_network                  (NetworkPlan: ordered
              kernel plans + segment buffer schedule w/ on-chip forwarding)
           -> netexec.execute_network / verify_network / measure_network
+  compiled tier
+      fuse.fused_runner                  (FusedNetwork: whole segments /
+         whole net jitted as single executables, process-wide cache
+         keyed by fuse.plan_signature — the default measured backend;
+         the interpret tier above stays the bit-accuracy oracle)
   calibration
-      calibrate.run_calibration          (per-kernel Spearman + fit)
+      calibrate.run_calibration          (per-kernel Spearman + fit,
+         per-backend coefficients)
       calibrate.run_network_calibration  (end-to-end network Spearman)
 """
 from .plan import GridAxis, KernelPlan, lower_scheme, lower_schedule
@@ -23,6 +29,8 @@ from .netplan import (NetworkPlan, SegmentPlan, TensorPlacement,
 from .netexec import (compare_network, execute_network, make_network_inputs,
                       measure_network, network_runner, reference_network,
                       verify_network)
+from .fuse import (FusedNetwork, cache_stats, clear_cache,
+                   compiled_plan_fn, fused_runner, plan_signature)
 from .calibrate import (fit_calibration, run_calibration,
                         run_network_calibration, save_record, spearman)
 
@@ -35,6 +43,8 @@ __all__ = [
     "compare_network", "execute_network", "make_network_inputs",
     "measure_network", "network_runner", "reference_network",
     "verify_network",
+    "FusedNetwork", "cache_stats", "clear_cache", "compiled_plan_fn",
+    "fused_runner", "plan_signature",
     "fit_calibration", "run_calibration", "run_network_calibration",
     "save_record", "spearman",
 ]

@@ -141,8 +141,11 @@ def scheme_variants(layer: LayerSpec, hw: HWTemplate,
 # Calibration run
 # ---------------------------------------------------------------------------
 
-def fit_calibration(pairs: List[Dict], hw: HWTemplate) -> Calibration:
-    """Least-squares fit: measured_seconds ~ cycle terms + grid steps."""
+def fit_calibration(pairs: List[Dict], hw: HWTemplate,
+                    backend: str = "interpret") -> Calibration:
+    """Least-squares fit: measured_seconds ~ cycle terms + grid steps.
+    The fit is stamped with the backend it measured, so interpreter and
+    compiled coefficients never masquerade as each other."""
     X = np.array([[p["cyc_compute"], p["cyc_dram"], p["cyc_gbuf"],
                    p["grid_steps"], 1.0] for p in pairs])
     y = np.array([p["measured_seconds"] for p in pairs])
@@ -152,17 +155,21 @@ def fit_calibration(pairs: List[Dict], hw: HWTemplate) -> Calibration:
         a_compute=float(coef[0]), a_dram=float(coef[1]),
         a_gbuf=float(coef[2]), a_step=float(coef[3]),
         intercept=float(coef[4]),
-        spearman=spearman(raw, y), n_pairs=len(pairs))
+        spearman=spearman(raw, y), n_pairs=len(pairs), backend=backend)
 
 
 def run_calibration(hw: Optional[HWTemplate] = None, quick: bool = True,
                     layers: Optional[Sequence[LayerSpec]] = None,
                     n_variants: int = 3, interpret: bool = True,
                     verify: bool = True, iters: int = 2,
-                    seed: int = 0) -> Dict:
+                    seed: int = 0, backend: Optional[str] = None) -> Dict:
     """Full calibration sweep; returns a JSON-safe record (see module
     docstring).  ``record["calibration"]`` round-trips through
-    ``cost_model.Calibration.from_json_dict``."""
+    ``cost_model.Calibration.from_json_dict`` and carries the executed
+    ``backend``, so ``load_calibration`` installs it per backend —
+    compiled-backend coefficients never price interpreter runs."""
+    from ..kernels.backend import resolve_backend
+    backend = resolve_backend(backend, interpret)
     hw = hw if hw is not None else default_hw()
     layers = list(layers) if layers is not None else default_sweep(quick)
     pairs: List[Dict] = []
@@ -187,7 +194,7 @@ def run_calibration(hw: Optional[HWTemplate] = None, quick: bool = True,
             # one jitted runner serves warmup, verification and timing —
             # the warmup output IS the numerics check, no extra execution
             inputs = make_inputs(plan, seed)
-            run = plan_runner(plan, interpret=interpret, jit=True)
+            run = plan_runner(plan, jit=True, backend=backend)
             out = jax.block_until_ready(run(inputs))
             if verify:
                 err = rel_error(out, reference_output(plan, inputs))
@@ -206,13 +213,13 @@ def run_calibration(hw: Optional[HWTemplate] = None, quick: bool = True,
 
     record: Dict = {
         "hw": hw.name,
-        "backend": "interpret" if interpret else "compiled",
+        "backend": backend,
         "n_pairs": len(pairs),
         "pairs": pairs,
         "skipped": skipped,
     }
     if len(pairs) >= 3:
-        cal = fit_calibration(pairs, hw)
+        cal = fit_calibration(pairs, hw, backend=backend)
         measured = [p["measured_seconds"] for p in pairs]
         calibrated = [
             cal.a_compute * p["cyc_compute"] + cal.a_dram * p["cyc_dram"]
@@ -244,7 +251,8 @@ def default_network_sweep(quick: bool = True):
 def run_network_calibration(hw: Optional[HWTemplate] = None,
                             quick: bool = True, nets=None,
                             interpret: bool = True, iters: int = 2,
-                            seed: int = 0, tol: float = 1e-3) -> Dict:
+                            seed: int = 0, tol: float = 1e-3,
+                            backend: Optional[str] = None) -> Dict:
     """End-to-end network calibration: each net is solved, lowered to a
     ``NetworkPlan``, verified against the whole-graph reference pass, and
     its measured wall clock compared with the schedule's predicted
@@ -252,10 +260,12 @@ def run_network_calibration(hw: Optional[HWTemplate] = None,
     (does the solver order whole nets the way execution does?), the
     counterpart of the per-kernel gate in ``run_calibration``."""
     from ..core.solver import solve
+    from ..kernels.backend import resolve_backend
     from .netexec import (compare_network, make_network_inputs,
                           measure_network, network_runner)
     from .netplan import lower_network
 
+    backend = resolve_backend(backend, interpret)
     hw = hw if hw is not None else default_hw()
     nets = list(nets) if nets is not None else default_network_sweep(quick)
     entries: List[Dict] = []
@@ -274,7 +284,7 @@ def run_network_calibration(hw: Optional[HWTemplate] = None,
             continue
         # one compiled runner serves verification, warmup and timing
         inputs = make_network_inputs(nplan, seed)
-        run = network_runner(nplan, inputs, interpret=interpret, jit=True)
+        run = network_runner(nplan, inputs, jit=True, backend=backend)
         ver = compare_network(nplan, run(), inputs, tol)
         entry = {
             "net": net.name,
@@ -300,12 +310,12 @@ def run_network_calibration(hw: Optional[HWTemplate] = None,
         entry["measured_seconds"] = measure_network(
             nplan, iters=iters, warmup=0, runner=run,
             predicted_seconds=entry["predicted_seconds_raw"],
-            drift_source="calibration")
+            drift_source="calibration", backend=backend)
         entries.append(entry)
 
     record: Dict = {
         "hw": hw.name,
-        "backend": "interpret" if interpret else "compiled",
+        "backend": backend,
         "n_nets": len(entries),
         "nets": entries,
         "skipped": skipped,
@@ -328,7 +338,49 @@ def load_record(path: str) -> Dict:
         return json.load(f)
 
 
+def main(argv=None) -> int:
+    """CLI sweep driver: ``python -m repro.lower.calibrate [--compiled]``.
+
+    ``--compiled`` measures the fused XLA tier instead of the interpret
+    oracle; the emitted record (and its fitted coefficients) carry the
+    backend, so loading it calibrates ``predicted_seconds`` for that
+    backend only."""
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--compiled", action="store_true",
+                        help="measure the fused compiled backend instead "
+                             "of the interpret oracle")
+    parser.add_argument("--backend", default=None,
+                        choices=["interpret", "pallas", "compiled"],
+                        help="explicit backend (overrides --compiled)")
+    parser.add_argument("--network", action="store_true",
+                        help="run the end-to-end network sweep instead of "
+                             "the per-kernel sweep")
+    parser.add_argument("--full", action="store_true",
+                        help="full sweep (default: quick)")
+    parser.add_argument("--iters", type=int, default=2)
+    parser.add_argument("--out", default=None,
+                        help="write the JSON record here")
+    args = parser.parse_args(argv)
+    backend = args.backend or ("compiled" if args.compiled else "interpret")
+    if args.network:
+        record = run_network_calibration(quick=not args.full,
+                                         iters=args.iters, backend=backend)
+    else:
+        record = run_calibration(quick=not args.full, iters=args.iters,
+                                 backend=backend)
+    if args.out:
+        save_record(record, args.out)
+    print(json.dumps({k: v for k, v in record.items()
+                      if k not in ("pairs", "nets")}, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
+
+
 __all__ = ["spearman", "default_hw", "default_sweep", "scheme_variants",
            "fit_calibration", "run_calibration", "save_record",
            "load_record", "Calibration", "default_network_sweep",
-           "run_network_calibration"]
+           "run_network_calibration", "main"]

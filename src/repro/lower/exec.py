@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..kernels import ref
+from ..kernels.backend import backend_interprets, resolve_backend
 from .plan import KernelPlan
 
 
@@ -357,14 +358,24 @@ def make_inputs(plan: KernelPlan, seed: int = 0) -> Dict[str, jnp.ndarray]:
 
 
 def plan_runner(plan: KernelPlan, interpret: bool = True,
-                jit: bool = False):
+                jit: bool = False, backend: Optional[str] = None):
     """Build a callable ``inputs_dict -> output`` for the plan.  With
     ``jit=True`` the whole pallas_call is staged once and re-invocations
-    time the compiled executable (the measurement path)."""
+    time the compiled executable (the measurement path).  ``backend``
+    resolves through ``kernels.backend`` (the one source of truth):
+    ``interpret``/``pallas`` run the Pallas kernel, ``compiled`` runs the
+    fused tier's XLA twin of the plan (``fuse.compiled_plan_fn``)."""
     if not plan.valid:
         raise ValueError(
             f"cannot execute invalid plan for layer {plan.layer.name!r}: "
             f"{plan.invalid_reason}")
+    backend = resolve_backend(backend, interpret)
+    if backend == "compiled":
+        from .fuse import compiled_plan_fn     # lazy: fuse imports netexec
+        base, names = compiled_plan_fn(plan)
+        fn = jax.jit(base) if jit else base
+        return lambda inputs: fn(*(inputs[n] for n in names))
+    interpret = backend_interprets(backend)
     if not interpret:
         _check_compiled_revisit_order(plan)
     if plan.kind == "fc":

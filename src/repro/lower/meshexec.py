@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.solver.multinode import MultiNodePlan, repartition
+from ..kernels.backend import backend_interprets, resolve_backend
 from ..obs import metrics, trace
 from ..runtime import inject
 from ..runtime.fault import ElasticPlanner, NodeFailure
@@ -86,7 +87,8 @@ class SegmentTask:
 
 def build_segment_tasks(nplan: NetworkPlan, weights: Dict,
                         interpret: bool = True,
-                        jit: bool = True) -> List[SegmentTask]:
+                        jit: bool = True,
+                        backend: Optional[str] = None) -> List[SegmentTask]:
     """Compile the plan's layers into per-segment tasks.
 
     ``weights`` holds the ``"<layer>.W"`` arrays (captured into the
@@ -94,8 +96,37 @@ def build_segment_tasks(nplan: NetworkPlan, weights: Dict,
     activations are *not* captured: each request supplies its
     ``"<layer>.I"`` tensors through the state dict, so one compiled
     task list serves every request.
+
+    Under ``backend="compiled"`` each task wraps one fused segment
+    executable from the process-wide cache (``fuse.fused_runner``):
+    replaying a task after a node failure — or rebuilding the task list
+    for the same plan on another request — reuses the traced
+    executable.  A fused task only emits tensors some later segment or
+    the network output needs; tensors the interpret tier would
+    round-trip but that stay inside one segment never leave the
+    executable.
     """
+    backend = resolve_backend(backend, interpret)
+    if backend == "compiled":
+        from .fuse import fused_runner
+        fused = fused_runner(nplan)
+        tasks = []
+        for seg in nplan.segments:
+            consumes, produces = fused.segment_io[seg.index]
+            acts = tuple(s for s in consumes if not s.endswith(".W"))
+            wkeys = tuple(s for s in consumes if s.endswith(".W"))
+
+            def run(state: Dict[str, np.ndarray], index=seg.index,
+                    acts=acts, wkeys=wkeys) -> Dict[str, np.ndarray]:
+                feed = {s: jnp.asarray(state[s]) for s in acts}
+                feed.update({w: weights[w] for w in wkeys})
+                out = fused.run_segment(index, feed)
+                return {k: np.asarray(v) for k, v in out.items()}
+
+            tasks.append(SegmentTask(seg.index, acts, produces, run))
+        return tasks
     _check_executable(nplan)
+    interpret = backend_interprets(backend)
     steps: Dict[str, Tuple[Callable, Tuple[str, ...]]] = {}
     for name in nplan.order:
         fn, srcs = _layer_fn(nplan, name, weights, interpret)

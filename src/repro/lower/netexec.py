@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ref
+from ..kernels.backend import backend_interprets, resolve_backend
 from ..obs import metrics, trace
 from ..workloads.layers import LayerSpec
 from .exec import (_check_compiled_revisit_order, _run_conv, _run_eltwise,
@@ -193,12 +194,16 @@ def _layer_fn(nplan: NetworkPlan, name: str, inputs: Dict,
 @dataclasses.dataclass
 class NetworkExecution:
     """Outputs of one end-to-end network run plus the realized buffer
-    schedule (which tensors stayed on-chip vs round-tripped)."""
+    schedule (which tensors stayed on-chip vs round-tripped).  Under the
+    fused ``compiled`` backend nothing crosses the host at all —
+    ``roundtrips`` then lists the segment-*boundary* tensors (the plan's
+    DRAM analogue), which stay device-resident inside the executable."""
 
     outputs: Dict[str, jnp.ndarray]
     forwarded: Tuple[str, ...]      # handed on-chip, never left the device
     roundtrips: Tuple[str, ...]     # materialized to host numpy
     seconds: float
+    backend: str = "interpret"
 
 
 def _check_executable(nplan: NetworkPlan) -> None:
@@ -210,26 +215,56 @@ def _check_executable(nplan: NetworkPlan) -> None:
 
 
 def network_runner(nplan: NetworkPlan, inputs: Dict,
-                   interpret: bool = True,
-                   jit: bool = True) -> Callable[[], NetworkExecution]:
+                   interpret: bool = True, jit: bool = True,
+                   backend: Optional[str] = None,
+                   keep: str = "all") -> Callable[[], NetworkExecution]:
     """Build a reusable ``() -> NetworkExecution`` for the plan.
 
-    Forwarded tensors are passed between kernels as live jax arrays;
-    boundary tensors are materialized to host numpy (``np.asarray``) and
-    re-uploaded at the consumer — the host round-trip that models the
-    DRAM boundary.  With ``jit=True`` each layer step (adapter + kernel)
-    is staged once and re-invocations reuse the compiled executables
-    (the measurement path).
+    ``backend`` selects the execution tier (``kernels.backend`` is the
+    source of truth; the legacy ``interpret`` bool keeps its meaning when
+    ``backend`` is None):
+
+      * ``"interpret"`` — per-layer interpret-mode ``pl.pallas_call``
+        chain, the bit-accuracy oracle.  Forwarded tensors pass between
+        kernels as live jax arrays; boundary tensors are materialized to
+        host numpy and re-uploaded at the consumer — the host round-trip
+        that models the DRAM boundary.  With ``jit=True`` each layer step
+        (adapter + kernel) is staged once and re-invocations reuse the
+        compiled executables.
+      * ``"pallas"`` — the same chain with compiled Pallas kernels (TPU).
+      * ``"compiled"`` — fused segments (``fuse.fused_runner``): the
+        whole plan runs as one jitted executable from the process-wide
+        executable cache; ``keep="boundary"`` returns only segment-
+        boundary outputs (the serving/measurement path), ``keep="all"``
+        every layer output (verification).
     """
+    backend = resolve_backend(backend, interpret)
+    if backend == "compiled":
+        from .fuse import fused_runner
+        fused = fused_runner(nplan)
+        fwd = nplan.forwarded()
+        boundary = tuple(n for n in nplan.order if n not in fwd)
+
+        def run_fused() -> NetworkExecution:
+            t0 = time.perf_counter()
+            outputs = fused(inputs, keep=keep)
+            for v in outputs.values():
+                jax.block_until_ready(v)
+            return NetworkExecution(
+                outputs=outputs, forwarded=fwd, roundtrips=boundary,
+                seconds=time.perf_counter() - t0, backend=backend)
+        return run_fused
+
     _check_executable(nplan)
-    if not interpret:
+    if backend == "pallas":
         # compiled Pallas cannot accumulate across non-consecutive output-
         # block revisits: apply the layer tier's guard to every plan
         for name in nplan.order:
             _check_compiled_revisit_order(nplan.plans[name])
     steps = []
     for name in nplan.order:
-        fn, srcs = _layer_fn(nplan, name, inputs, interpret)
+        fn, srcs = _layer_fn(nplan, name, inputs,
+                             backend_interprets(backend))
         steps.append((name, jax.jit(fn) if jit else fn, srcs,
                       nplan.placements[name].forwarded))
 
@@ -251,18 +286,21 @@ def network_runner(nplan: NetworkPlan, inputs: Dict,
         outputs = {**onchip,
                    **{k: jnp.asarray(v) for k, v in host.items()}}
         return NetworkExecution(outputs=outputs, forwarded=tuple(onchip),
-                                roundtrips=tuple(host), seconds=seconds)
+                                roundtrips=tuple(host), seconds=seconds,
+                                backend=backend)
     return run
 
 
 def execute_network(nplan: NetworkPlan, inputs: Optional[Dict] = None,
                     interpret: bool = True, seed: int = 0,
-                    jit: bool = True) -> NetworkExecution:
+                    jit: bool = True,
+                    backend: Optional[str] = None) -> NetworkExecution:
     """Run every kernel of the plan in topological order (one-shot
     convenience over ``network_runner``)."""
     inputs = inputs if inputs is not None else make_network_inputs(nplan,
                                                                    seed)
-    return network_runner(nplan, inputs, interpret=interpret, jit=jit)()
+    return network_runner(nplan, inputs, interpret=interpret, jit=jit,
+                          backend=backend)()
 
 
 # ---------------------------------------------------------------------------
@@ -321,63 +359,77 @@ def compare_network(nplan: NetworkPlan, ex: NetworkExecution,
 
 
 def verify_network(nplan: NetworkPlan, interpret: bool = True,
-                   seed: int = 0, tol: float = 1e-3,
-                   jit: bool = True) -> NetworkVerification:
+                   seed: int = 0, tol: float = 1e-3, jit: bool = True,
+                   backend: Optional[str] = None) -> NetworkVerification:
     """Execute the plan and compare against the whole-graph reference
-    (one-shot convenience over ``compare_network``)."""
+    (one-shot convenience over ``compare_network``).  The default backend
+    is the interpret oracle; pass ``backend="compiled"`` to verify the
+    fused tier (it always keeps every layer output for the comparison)."""
     inputs = make_network_inputs(nplan, seed)
-    ex = execute_network(nplan, inputs, interpret=interpret, jit=jit)
+    ex = execute_network(nplan, inputs, interpret=interpret, jit=jit,
+                         backend=backend)
     return compare_network(nplan, ex, inputs, tol)
 
 
 _m_drift = metrics.histogram(
     "latency_drift_ratio",
     "measured / predicted network latency of lowered plans",
-    ("source",), buckets=metrics.DRIFT_BUCKETS)
+    ("source", "backend"), buckets=metrics.DRIFT_BUCKETS)
 
 
 def record_latency_drift(predicted_seconds: Optional[float],
                          measured_seconds: float,
-                         source: str = "netexec") -> Optional[float]:
+                         source: str = "netexec",
+                         backend: str = "interpret") -> Optional[float]:
     """Record one predicted-vs-measured latency pair into the
     ``latency_drift_ratio`` histogram (+ a trace instant), so cost-model
     calibration decay is visible at serve time, not only in the
-    calibration bench.  Returns the ratio, or None if either side is
-    unusable (zero/negative prediction, NaN measurement)."""
+    calibration bench.  The ``backend`` label keeps interpreter-tax
+    ratios from polluting the compiled tier's drift signal.  Returns the
+    ratio, or None if either side is unusable (zero/negative prediction,
+    NaN measurement)."""
     if not predicted_seconds or predicted_seconds <= 0.0:
         return None
     if not math.isfinite(measured_seconds) or measured_seconds <= 0.0:
         return None
     ratio = measured_seconds / predicted_seconds
-    _m_drift.observe(ratio, source=source)
-    trace.instant("netexec.latency_drift", source=source,
+    _m_drift.observe(ratio, source=source, backend=backend)
+    trace.instant("netexec.latency_drift", source=source, backend=backend,
                   ratio=round(ratio, 4))
     return ratio
 
 
 def measure_network(nplan: NetworkPlan, inputs: Optional[Dict] = None,
-                    interpret: bool = True, iters: int = 2,
+                    interpret: Optional[bool] = None, iters: int = 2,
                     warmup: int = 1,
                     runner: Optional[Callable[[], NetworkExecution]] = None,
                     predicted_seconds: Optional[float] = None,
-                    drift_source: str = "netexec") -> float:
+                    drift_source: str = "netexec",
+                    backend: Optional[str] = None) -> float:
     """Measured wall-clock seconds for one end-to-end network execution
     (min over ``iters`` after ``warmup`` runs compile every layer step).
     Includes the buffer schedule's real host round-trips — network time,
-    not a sum of isolated kernel times.
+    not a sum of isolated kernel times.  Measurement defaults to the
+    **compiled** tier (the serving path: one fused executable per
+    segment, boundary outputs only, forwarded tensors never
+    materialize); pass ``backend="interpret"`` (or legacy
+    ``interpret=True``) to time the oracle instead.
 
     Pass an existing ``network_runner`` (with ``warmup=0`` if it already
     ran, e.g. for verification) to reuse its compiled steps — the single
     timing protocol behind the calibration sweep and the quickstart."""
+    backend = resolve_backend(backend, interpret)
     if runner is None:
         inputs = inputs if inputs is not None \
             else make_network_inputs(nplan)
-        runner = network_runner(nplan, inputs, interpret=interpret,
-                                jit=True)
+        runner = network_runner(
+            nplan, inputs, jit=True, backend=backend,
+            keep="boundary" if backend == "compiled" else "all")
         warmup = max(1, warmup)         # fresh steps always need a compile
     for _ in range(warmup):
         runner()
     out = min(runner().seconds for _ in range(max(1, iters)))
     if predicted_seconds is not None:
-        record_latency_drift(predicted_seconds, out, source=drift_source)
+        record_latency_drift(predicted_seconds, out, source=drift_source,
+                             backend=backend)
     return out

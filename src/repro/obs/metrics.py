@@ -24,7 +24,12 @@ Design constraints:
 Naming scheme (kept Prometheus-conventional): ``<subsystem>_<what>``
 with ``_total`` for counters and ``_seconds``/``_ratio`` units for
 histograms — e.g. ``store_events_total{event="hits"}``,
-``service_request_seconds{source="cached"}``, ``latency_drift_ratio``.
+``service_request_seconds{source="cached"}``, ``latency_drift_ratio``
+(labeled ``{source, backend}``: predicted-vs-measured drift is a
+different series per execution backend, interpreter seconds and fused
+compiled-XLA seconds being different units).  The compiled tier adds
+``fused_cache_events_total{event}`` / ``fused_cache_size`` /
+``fused_compile_seconds`` (``repro.lower.fuse``).
 """
 from __future__ import annotations
 

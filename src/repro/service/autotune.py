@@ -36,19 +36,20 @@ class _Skip(Exception):
 
 
 def _run_candidate(rank: int, sched, graph: LayerGraph, hw: HWTemplate,
-                   seed: int, iters: int, interpret: bool,
+                   seed: int, iters: int, backend: str,
                    tol: float) -> Dict:
     """Lower + verify + measure one candidate (raises ``_Skip`` with the
     disqualification reason).  Runs inside the per-candidate worker so a
     timeout can abandon it."""
-    with trace.span("autotune.candidate", rank=rank, graph=graph.name):
+    with trace.span("autotune.candidate", rank=rank, graph=graph.name,
+                    backend=backend):
         return _run_candidate_impl(rank, sched, graph, hw, seed, iters,
-                                   interpret, tol)
+                                   backend, tol)
 
 
 def _run_candidate_impl(rank: int, sched, graph: LayerGraph,
                         hw: HWTemplate, seed: int, iters: int,
-                        interpret: bool, tol: float) -> Dict:
+                        backend: str, tol: float) -> Dict:
     # execution lives behind jax; keep the service core numpy-only
     from ..lower.netexec import (compare_network, make_network_inputs,
                                  measure_network, network_runner)
@@ -62,7 +63,7 @@ def _run_candidate_impl(rank: int, sched, graph: LayerGraph,
     if bad:
         raise _Skip("; ".join(f"{n}: {r}" for n, r in bad))
     inputs = make_network_inputs(nplan, seed)
-    run = network_runner(nplan, inputs, interpret=interpret, jit=True)
+    run = network_runner(nplan, inputs, jit=True, backend=backend)
     ver = compare_network(nplan, run(), inputs, tol)
     if not ver.ok:
         raise _Skip(f"numerics {ver.max_rel_err:.2e} at "
@@ -70,7 +71,7 @@ def _run_candidate_impl(rank: int, sched, graph: LayerGraph,
     measured = measure_network(
         nplan, iters=iters, warmup=0, runner=run,
         predicted_seconds=sched.total_latency_cycles / hw.freq_hz,
-        drift_source="autotune")
+        drift_source="autotune", backend=backend)
     if spec is not None and spec.kind == "nan":
         measured = float("nan")
     return {
@@ -86,17 +87,29 @@ def _run_candidate_impl(rank: int, sched, graph: LayerGraph,
 
 def autotune_network(graph: LayerGraph, hw: HWTemplate,
                      store: Optional[ScheduleStore] = None, k: int = 3,
-                     iters: int = 2, interpret: bool = True, seed: int = 0,
+                     iters: int = 2, interpret: Optional[bool] = None,
+                     seed: int = 0,
                      max_workers: Optional[int] = None,
                      tol: float = 1e-3,
                      candidate_timeout_s: Optional[float] = None,
+                     backend: Optional[str] = None,
                      **options) -> Dict:
     """Autotune one network; returns a JSON-safe report.  Candidates that
     fail to lower or verify — or that crash, return a non-finite
     measurement, or exceed ``candidate_timeout_s`` — are disqualified
     with a recorded reason instead of aborting the run; the report's
-    ``candidates`` are the ones that really executed."""
+    ``candidates`` are the ones that really executed.
+
+    Measured re-ranking runs on the fused compiled tier by default
+    (``backend=None`` + ``interpret=None`` resolves to the process
+    default): top-k candidates of the same graph share a plan-signature
+    keyed executable cache, so re-measuring a candidate never re-traces.
+    Pass ``backend="interpret"`` (or legacy ``interpret=True``) to rank
+    on the bit-accuracy oracle instead."""
+    from ..kernels.backend import resolve_backend
     from ..lower.calibrate import spearman
+
+    backend = resolve_backend(backend, interpret)
 
     opts = solver_options(**options)
     t0 = time.perf_counter()
@@ -107,7 +120,7 @@ def autotune_network(graph: LayerGraph, hw: HWTemplate,
         try:
             if candidate_timeout_s is None:
                 entry = _run_candidate(rank, sched, graph, hw, seed,
-                                       iters, interpret, tol)
+                                       iters, backend, tol)
             else:
                 # a fresh single-thread pool per candidate: a hung
                 # measurement is abandoned (the thread leaks until it
@@ -116,7 +129,7 @@ def autotune_network(graph: LayerGraph, hw: HWTemplate,
                 try:
                     entry = ex.submit(
                         _run_candidate, rank, sched, graph, hw, seed,
-                        iters, interpret, tol
+                        iters, backend, tol
                     ).result(timeout=candidate_timeout_s)
                 finally:
                     ex.shutdown(wait=False)
@@ -169,7 +182,7 @@ def autotune_network(graph: LayerGraph, hw: HWTemplate,
             "measured_seconds": best["measured_seconds"],
             "predicted_cycles": best["predicted_cycles"],
             "rank": best["rank"],
-            "backend": "interpret" if interpret else "compiled",
+            "backend": backend,
             "rank_agreement": report.get("rank_agreement"),
             "n_candidates_executed": len(entries),
         }

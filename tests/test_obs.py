@@ -454,21 +454,28 @@ def test_solver_counters_and_spans(tmp_path):
 
 def test_latency_drift_histogram_and_event():
     h = REGISTRY.get("latency_drift_ratio")
-    before = h.value(source="unit")
+    before = h.value(source="unit", backend="interpret")
     t = trace.enable()
     try:
         ratio = record_latency_drift(0.010, 0.012, source="unit")
     finally:
         trace.disable()
     assert ratio == pytest.approx(1.2)
-    assert h.value(source="unit") == before + 1
+    assert h.value(source="unit", backend="interpret") == before + 1
     (ev,) = t.find("netexec.latency_drift")
     assert ev["args"]["source"] == "unit"
+    assert ev["args"]["backend"] == "interpret"
     assert ev["args"]["ratio"] == pytest.approx(1.2, abs=1e-3)
+    # the exec backend is a first-class drift dimension: compiled-tier
+    # observations land in their own series
+    b_compiled = h.value(source="unit", backend="compiled")
+    record_latency_drift(0.010, 0.011, source="unit", backend="compiled")
+    assert h.value(source="unit", backend="compiled") == b_compiled + 1
+    assert h.value(source="unit", backend="interpret") == before + 1
     # degenerate inputs are refused, not observed
     assert record_latency_drift(0.0, 1.0, source="unit") is None
     assert record_latency_drift(1.0, float("nan"), source="unit") is None
-    assert h.value(source="unit") == before + 1
+    assert h.value(source="unit", backend="interpret") == before + 1
 
 
 # ---------------------------------------------------------------------------
