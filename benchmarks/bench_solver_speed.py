@@ -617,13 +617,19 @@ def bench_obs(quick: bool) -> dict:
     from repro.runtime.straggler import StragglerDetector
 
     hw = default_hw()
-    repeats = 3 if quick else 5
+    repeats = 7 if quick else 9
     net = get_net("resnet", batch=64)
 
     def cold_solve():
         memo.clear_all()
         sched = solve(net, hw)
         assert sched.valid
+
+    # several solves per timed sample: a single ~0.15s cold solve is
+    # inside this machine class's scheduler-noise floor (+-30% per-round
+    # swings), far too coarse to resolve a 2% overhead; amortizing 3
+    # solves per sample plus min-of-N gets the estimate under 1%
+    inner = 4
 
     def timed(mode: str) -> float:
         if mode == "off":
@@ -635,8 +641,9 @@ def bench_obs(quick: bool) -> dict:
             obs.on()
         try:
             t0 = time.perf_counter()
-            cold_solve()
-            return time.perf_counter() - t0
+            for _ in range(inner):
+                cold_solve()
+            return (time.perf_counter() - t0) / inner
         finally:
             trace.disable()         # drop the throwaway overhead trace
             obs.on()
@@ -647,9 +654,12 @@ def bench_obs(quick: bool) -> dict:
     for _ in range(repeats):
         for m in modes:
             best[m] = min(best[m], timed(m))
-    # clamp: min-of-N jitter can make the instrumented run "faster"
-    disabled_overhead = max(0.0, best["metrics"] / best["off"] - 1.0)
-    enabled_overhead = max(0.0, best["tracing"] / best["off"] - 1.0)
+    # report the *signed* raw deltas: min-of-N jitter can make an
+    # instrumented run measure "faster" than the baseline, and hiding
+    # that (the old max(0, ...) here) also hid how noisy the measurement
+    # was.  The CI gate clamps at comparison time instead.
+    disabled_overhead = best["metrics"] / best["off"] - 1.0
+    enabled_overhead = best["tracing"] / best["off"] - 1.0
 
     # -- part 2: traced multi-node chaos run --------------------------------
     n_nodes = 4
@@ -714,6 +724,7 @@ def bench_obs(quick: bool) -> dict:
     record = {
         "net": "resnet/b64",
         "repeats": repeats,
+        "inner_solves": inner,
         "solve_seconds": dict(best),
         "disabled_overhead": disabled_overhead,
         "enabled_overhead": enabled_overhead,
@@ -1070,7 +1081,10 @@ def main(argv=None) -> int:
         if ob is None:
             fails.append("obs disabled-overhead gate set but sweep did "
                          "not run (pass --obs)")
-        elif ob["disabled_overhead"] > args.max_obs_disabled_overhead:
+        # the record keeps signed raw deltas; the gate clamps negative
+        # jitter ("instrumented was faster") to zero when comparing
+        elif max(0.0, ob["disabled_overhead"]) > \
+                args.max_obs_disabled_overhead:
             fails.append(
                 f"obs disabled-mode overhead "
                 f"{ob['disabled_overhead']:.4f} > "
@@ -1081,7 +1095,8 @@ def main(argv=None) -> int:
         if ob is None:
             fails.append("obs enabled-overhead gate set but sweep did "
                          "not run (pass --obs)")
-        elif ob["enabled_overhead"] > args.max_obs_enabled_overhead:
+        elif max(0.0, ob["enabled_overhead"]) > \
+                args.max_obs_enabled_overhead:
             fails.append(
                 f"obs tracing-enabled overhead "
                 f"{ob['enabled_overhead']:.4f} > "

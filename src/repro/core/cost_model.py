@@ -15,6 +15,14 @@ from ..hw.template import HWTemplate
 from .directives import LayerScheme
 
 
+#: the per-term energy attribution order: these five fields sum to
+#: ``energy_pj`` exactly (``evaluate_layer`` computes the total as their
+#: sum), which is what lets the explain record's attribution reconcile
+#: against a schedule's scored cost.
+ENERGY_TERMS = ("mac_energy", "regf_energy", "gbuf_energy", "noc_energy",
+                "dram_energy")
+
+
 @dataclasses.dataclass
 class CostBreakdown:
     valid: bool
@@ -33,6 +41,26 @@ class CostBreakdown:
 
     def edp(self) -> float:
         return self.energy_pj * self.latency_cycles
+
+    def attribution(self) -> Dict[str, float]:
+        """Per-term energy attribution; values sum to ``energy_pj``."""
+        return {t: getattr(self, t) for t in ENERGY_TERMS}
+
+
+def attribute_costs(costs) -> Dict[str, float]:
+    """Aggregate per-term attribution across breakdowns (a segment's or
+    a whole schedule's ``layer_costs``).  The returned terms sum to the
+    summed ``energy_pj`` up to float association order — the explain
+    record's reconciliation invariant; ``total_pj`` carries the summed
+    ``energy_pj`` for cross-checking."""
+    out = {t: 0.0 for t in ENERGY_TERMS}
+    total = 0.0
+    for c in costs:
+        for t in ENERGY_TERMS:
+            out[t] += getattr(c, t)
+        total += c.energy_pj
+    out["total_pj"] = total
+    return out
 
 
 def invalid(reason: str) -> CostBreakdown:

@@ -388,6 +388,100 @@ def _candidate_batch(graph: LayerGraph, hw: HWTemplate,
     return cb
 
 
+# ---------------------------------------------------------------------------
+# explain: the candidate funnel as a first-class record (obs.explain)
+# ---------------------------------------------------------------------------
+
+def _classify_invalid(graph: LayerGraph, hw: HWTemplate,
+                      cb: CandidateBatch,
+                      idx: np.ndarray) -> Dict[str, Dict]:
+    """Attribute each validity-pruned candidate to its failing rule.
+
+    The batched validity check has exactly one rule — the conservative
+    min-buffer bound (``min_buffer_requirement_bytes`` vs the segment's
+    aggregated GBUF).  Recompute it for the invalid lanes to name the
+    *first* overflowing layer per candidate, so the explain report can
+    say which layer killed the candidates, not just how many died."""
+    out: Dict[str, Dict] = {
+        "gbuf_min_buffer": {"count": int(len(idx)), "layers": {}}}
+    if len(idx) == 0:
+        return out
+    gp = graph_pack(graph, hw)
+    starts = cb.starts[idx]
+    stops = cb.stops[idx]
+    gfs = cb.gfs[idx]
+    lengths = stops - starts
+    lmax = int(lengths.max())
+    pos = np.arange(lmax, dtype=np.int64)
+    mask = pos[None, :] < lengths[:, None]
+    lidx = np.minimum(starts[:, None] + pos[None, :], gp.n_layers - 1)
+    src_on = gp.src_ok[lidx] & (gp.min_src[lidx] >= starts[:, None]) \
+        & (gp.max_src[lidx] < stops[:, None])
+    dst_on = gp.has_cons[lidx] & (gp.min_cons[lidx] >= starts[:, None]) \
+        & (gp.max_cons[lidx] < stops[:, None])
+    B = gp.bytes_per_elem[lidx]
+    gf_c = gfs[:, None]
+    need = np.where(src_on, 2.0 * gp.ifmap[lidx] * gf_c * B, 0.0) \
+        + np.where(dst_on, 2.0 * gp.ofmap[lidx] * gf_c * B, 0.0)
+    nodes = np.ones((len(idx), lmax))
+    for r, c in enumerate(idx):
+        for p, (h, w) in enumerate(cb.allocs[int(c)]):
+            nodes[r, p] = h * w
+    over = (need > nodes * hw.gbuf.capacity_bytes) & mask
+    first = np.argmax(over, axis=1)
+    layers: Dict[str, int] = {}
+    for r in range(len(idx)):
+        li = int(lidx[r, first[r]])
+        name = graph.layers[li].name
+        layers[name] = layers.get(name, 0) + 1
+    out["gbuf_min_buffer"]["layers"] = layers
+    return out
+
+
+def funnel_from_batch(graph: LayerGraph, hw: HWTemplate,
+                      cb: CandidateBatch) -> Dict:
+    """One enumeration batch's candidate funnel as a JSON-safe record:
+    per-(start, stop) group enumerated/valid/Pareto-kept counts, overall
+    totals, and per-rule pruning attribution.
+
+    The totals equal the ``PruneStats`` deltas a DP run records for the
+    same starts *by construction* — both are computed from the same
+    memoized ``CandidateBatch`` — which is what lets the Table VI bench
+    and the flight recorder agree without reconciliation."""
+    totals = {"enumerated": int(len(cb)),
+              "after_validity": int(cb.valid.sum()),
+              "after_pareto": int(len(cb.kept))}
+    if len(cb) == 0:
+        return {"groups": [], "totals": totals, "pruned_by_rule": {}}
+    kept_mask = np.zeros(len(cb), dtype=bool)
+    kept_mask[cb.kept] = True
+    key = cb.starts * np.int64(len(graph.layers) + 1) + cb.stops
+    bounds = np.concatenate([[0], np.flatnonzero(np.diff(key)) + 1,
+                             [len(cb)]])
+    groups = []
+    for gi in range(len(bounds) - 1):
+        a, b = int(bounds[gi]), int(bounds[gi + 1])
+        groups.append({"start": int(cb.starts[a]),
+                       "stop": int(cb.stops[a]),
+                       "enumerated": b - a,
+                       "valid": int(cb.valid[a:b].sum()),
+                       "kept": int(kept_mask[a:b].sum())})
+    rules = _classify_invalid(graph, hw, cb, np.flatnonzero(~cb.valid))
+    return {"groups": groups, "totals": totals, "pruned_by_rule": rules}
+
+
+def funnel_report(graph: LayerGraph, hw: HWTemplate,
+                  starts: Optional[Iterable[int]] = None,
+                  max_len: int = 4, wide: bool = True) -> Dict:
+    """The candidate funnel for these start indices (every layer when
+    None) — a cache hit on the memoized batch right after a solve of the
+    same shape, so extracting the funnel costs ~nothing."""
+    if starts is None:
+        starts = range(len(graph.layers))
+    cb = _candidate_batch(graph, hw, starts, max_len, None, wide)
+    return funnel_from_batch(graph, hw, cb)
+
+
 def segment_pool(graph: LayerGraph, hw: HWTemplate,
                  starts: Iterable[int], max_len: int = 4,
                  stats: Optional[PruneStats] = None,
@@ -512,7 +606,8 @@ def _seg_cost_fn(objective: str):
 
 def dp_prioritize(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
                   max_seg_len: int = 4, objective: str = "energy",
-                  stats: Optional[PruneStats] = None) -> List[Chain]:
+                  stats: Optional[PruneStats] = None,
+                  explain=None) -> List[Chain]:
     """DP over the (topologically ordered) layer list: best segment chains
     ending at each layer, keeping top-k_S everywhere (§IV-B).
 
@@ -520,10 +615,16 @@ def dp_prioritize(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
     are formed with one broadcast per predecessor start and the top-k_S
     selected with argpartition over the flat array — ``SegmentScheme`` /
     ``Chain`` objects exist only for the returned chains.
+
+    ``explain``, when an ``obs.explain.ExplainSink``, receives the
+    candidate funnel of this run (``funnel_from_batch`` over the same
+    memoized batch the DP consumed, so counts match ``stats`` exactly).
     """
     n = len(graph.layers)
     with trace.span("dp.enumerate", graph=graph.name, layers=n):
         cb = _candidate_batch(graph, hw, range(n), max_seg_len, stats)
+    if explain is not None:
+        explain.set_funnel(funnel_from_batch(graph, hw, cb))
     if objective == "energy":
         costv = cb.energy
     elif objective == "edp":

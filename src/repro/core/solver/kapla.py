@@ -26,7 +26,8 @@ from ...hw.template import HWTemplate
 from ...obs import metrics, trace
 from ...runtime import inject
 from ...workloads.layers import LayerGraph, LayerSpec
-from ..cost_model import CostBreakdown, combine_segment, evaluate_layer
+from ..cost_model import CostBreakdown, attribute_costs, combine_segment, \
+    cycle_terms, evaluate_layer
 from ..directives import LayerScheme
 from .interlayer import Chain, PruneStats, dp_prioritize, io_flags, \
     _consumer_map
@@ -66,6 +67,12 @@ class NetworkSchedule:
     # deserialized schedule can be re-scored bit-identically without
     # re-running the intra-layer solver (``rescore``).
     seg_pipelined: Optional[Tuple[bool, ...]] = None
+    # the solver flight-recorder block (obs.explain): candidate funnel,
+    # per-term cost attribution, runners-up.  A plain JSON-safe dict so
+    # it round-trips through to_json/from_json and therefore persists
+    # inside ScheduleStore records untouched.  None unless the solve ran
+    # with explain enabled — the default keeps solves overhead-free.
+    explain: Optional[Dict] = None
 
     @property
     def valid(self) -> bool:
@@ -170,6 +177,7 @@ class NetworkSchedule:
             "solve_seconds": self.solve_seconds,
             "prune_stats": None if self.prune_stats is None
             else dataclasses.asdict(self.prune_stats),
+            "explain": self.explain,
         }
 
     @staticmethod
@@ -207,7 +215,7 @@ class NetworkSchedule:
             total_latency_cycles=d["total_latency_cycles"],
             solve_seconds=d.get("solve_seconds", 0.0),
             prune_stats=None if stats is None else PruneStats(**stats),
-            seg_pipelined=pipelined)
+            seg_pipelined=pipelined, explain=d.get("explain"))
 
 
 def solve_segment(graph: LayerGraph, hw: HWTemplate, seg, consumers,
@@ -469,7 +477,7 @@ def _candidate_chains(graph: LayerGraph, hw: HWTemplate, k_s: int,
                       max_seg_len: int, objective: str,
                       stats: PruneStats,
                       seed_chains: Optional[Sequence[Chain]],
-                      use_dp: bool) -> List[Chain]:
+                      use_dp: bool, explain=None) -> List[Chain]:
     """DP-prioritized chains plus deduplicated warm-start seeds (seeds
     first, so ties between a seed and an identical DP chain keep the
     seed's detail solve)."""
@@ -477,7 +485,8 @@ def _candidate_chains(graph: LayerGraph, hw: HWTemplate, k_s: int,
     if use_dp or not chains:
         chains = chains + dp_prioritize(graph, hw, k_s=k_s,
                                         max_seg_len=max_seg_len,
-                                        objective=objective, stats=stats)
+                                        objective=objective, stats=stats,
+                                        explain=explain)
     seen = set()
     uniq = []
     for c in chains:
@@ -488,14 +497,88 @@ def _candidate_chains(graph: LayerGraph, hw: HWTemplate, k_s: int,
     return uniq
 
 
+#: runners-up captured into an explain record (cost deltas only — the
+#: losing chains' detail solves are not persisted)
+EXPLAIN_MAX_RUNNERS_UP = 8
+
+
+def _finish_explain(sink, graph: LayerGraph, hw: HWTemplate,
+                    objective: str,
+                    scored: Sequence[Tuple[float, int, "NetworkSchedule"]],
+                    best: "NetworkSchedule") -> Dict:
+    """Fill the winner / runners-up sections of an explain sink from one
+    ``solve_topk`` scoring pass and return the finished record."""
+    sink.set("graph", graph.name)
+    sink.set("objective", objective)
+    pipe = best.seg_pipelined or ()
+    segments: List[Dict] = []
+    if best.chain is not None:
+        for i, seg in enumerate(best.chain.segments):
+            seg_layers = graph.layers[seg.start:seg.stop]
+            seg_attr = attribute_costs(
+                best.layer_costs[l.name] for l in seg_layers
+                if l.name in best.layer_costs)
+            segments.append({
+                "start": seg.start, "stop": seg.stop,
+                "alloc": [list(a) for a in seg.alloc],
+                "granule_frac": seg.granule_frac,
+                "pipelined": bool(pipe[i]) if i < len(pipe) else None,
+                "attribution": seg_attr})
+    costs = list(best.layer_costs.values())
+    cyc = {"cyc_compute": 0.0, "cyc_dram": 0.0, "cyc_gbuf": 0.0}
+    for name, c in best.layer_costs.items():
+        macs = best.layer_schemes[name].layer.total_macs()
+        for k_, v in cycle_terms(c, macs, hw).items():
+            cyc[k_] += v
+    grid_h, grid_w = hw.node_array
+    n_costs = max(1, len(costs))
+    winner = {
+        "score": _chain_score(best.total_energy_pj,
+                              best.total_latency_cycles, objective),
+        "energy_pj": best.total_energy_pj,
+        "latency_cycles": best.total_latency_cycles,
+        "segments": segments,
+        "attribution": attribute_costs(costs),
+        "cycle_terms": cyc,
+        "occupancy": {
+            "avg_pes_used": sum(c.pes_used for c in costs) / n_costs,
+            "avg_nodes_used": sum(c.nodes_used for c in costs) / n_costs,
+            "grid_nodes": grid_h * grid_w,
+            "pes_per_node": hw.num_pes_per_node,
+        },
+    }
+    sink.set_winner(winner)
+    runners: List[Dict] = []
+    for rank, (score, _, sched) in enumerate(
+            scored[1:1 + EXPLAIN_MAX_RUNNERS_UP], start=2):
+        delta = score - winner["score"]
+        runners.append({
+            "rank": rank, "score": score, "delta": delta,
+            "delta_frac": delta / winner["score"] if winner["score"]
+            else 0.0,
+            "segments": [] if sched.chain is None else
+            [{"start": s.start, "stop": s.stop,
+              "granule_frac": s.granule_frac}
+             for s in sched.chain.segments]})
+    sink.set_runners_up(runners)
+    # the funnel groups of the winning chain, for the rendered table
+    funnel = sink.record.get("funnel")
+    if funnel and best.chain is not None:
+        want = {(s.start, s.stop) for s in best.chain.segments}
+        funnel["winner_groups"] = [
+            g for g in funnel.get("groups", ())
+            if (g["start"], g["stop"]) in want]
+    return sink.to_json()
+
+
 def solve_topk(graph: LayerGraph, hw: HWTemplate, k: int = 1,
                k_s: int = 4, max_seg_len: int = 4,
                objective: str = "energy", layer_solver=solve_intra_layer,
                max_workers: Optional[int] = None,
                seed_chains: Optional[Sequence[Chain]] = None,
                use_dp: bool = True,
-               stats_out: Optional[PruneStats] = None
-               ) -> List[NetworkSchedule]:
+               stats_out: Optional[PruneStats] = None,
+               explain=False) -> List[NetworkSchedule]:
     """The k best valid chains, each detail-solved into a full
     ``NetworkSchedule``, best first (detailed-model score under
     ``objective``).  ``solve`` is the ``k=1`` argmin special case; the
@@ -506,15 +589,27 @@ def solve_topk(graph: LayerGraph, hw: HWTemplate, k: int = 1,
     detail-solves only the seeds — the store's warm path, trading
     optimality for speed.  ``stats_out``, when given, receives the prune
     counters even when no valid schedule exists (the returned list is
-    then empty)."""
+    then empty).
+
+    ``explain`` turns on the solver flight recorder: pass ``True`` (or
+    an ``obs.explain.ExplainSink`` to share across tiers) and the best
+    schedule's ``.explain`` carries the candidate funnel, per-term cost
+    attribution and runners-up — persisted through ``to_json`` into
+    store records.  Off by default: the disabled path adds nothing."""
     t0 = time.perf_counter()
     stats = stats_out if stats_out is not None else PruneStats()
+    sink = None
+    if explain:
+        from ...obs.explain import ExplainSink
+        sink = explain if isinstance(explain, ExplainSink) \
+            else ExplainSink()
     k_eff = max(k_s, k)
     before = (stats.total, stats.after_validity, stats.after_pareto)
     with trace.span("solve.dp", graph=graph.name, k_s=k_eff):
         chains = _candidate_chains(graph, hw, k_eff, max_seg_len,
                                    objective, seed_chains=seed_chains,
-                                   stats=stats, use_dp=use_dp)
+                                   stats=stats, use_dp=use_dp,
+                                   explain=sink)
     _record_prune(stats, before)
     consumers = _consumer_map(graph)
     # the chains share most of their segments: collect the distinct ones up
@@ -544,6 +639,9 @@ def solve_topk(graph: LayerGraph, hw: HWTemplate, k: int = 1,
                 pipe)))
     scored.sort(key=lambda t: (t[0], t[1]))     # stable: DP order on ties
     out = [s for _, _, s in scored[:max(1, k)]]
+    if sink is not None and out:
+        out[0].explain = _finish_explain(sink, graph, hw, objective,
+                                         scored, out[0])
     elapsed = time.perf_counter() - t0
     _m_solve_seconds.observe(elapsed, entry="topk")
     for s in out:
@@ -556,7 +654,7 @@ def solve(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
           layer_solver=solve_intra_layer,
           max_workers: Optional[int] = None,
           seed_chains: Optional[Sequence[Chain]] = None,
-          use_dp: bool = True) -> NetworkSchedule:
+          use_dp: bool = True, explain=False) -> NetworkSchedule:
     """Two-level solve: batched inter-layer DP prioritization on top, then
     the k_S candidate chains' distinct segments detail-solved concurrently
     (the intra-layer judge is numpy-bound and releases the GIL, and the
@@ -571,7 +669,7 @@ def solve(graph: LayerGraph, hw: HWTemplate, k_s: int = 4,
     res = solve_topk(graph, hw, k=1, k_s=k_s, max_seg_len=max_seg_len,
                      objective=objective, layer_solver=layer_solver,
                      max_workers=max_workers, seed_chains=seed_chains,
-                     use_dp=use_dp, stats_out=stats)
+                     use_dp=use_dp, stats_out=stats, explain=explain)
     if not res:
         best = _invalid_schedule(graph, stats)
         best.solve_seconds = time.perf_counter() - t0

@@ -351,7 +351,8 @@ def _finish_plan(schedule: NetworkSchedule, raw: _RawParts,
 def plan_multinode(schedule: NetworkSchedule, graph: LayerGraph,
                    hw: HWTemplate, mesh: Optional[NodeMesh] = None,
                    k: int = 4,
-                   objective: str = "throughput") -> MultiNodePlan:
+                   objective: str = "throughput",
+                   explain=None) -> MultiNodePlan:
     """Place ``schedule``'s chain segments onto ``mesh``.
 
     A DP over (chain segments placed, nodes consumed) enumerates every
@@ -359,6 +360,11 @@ def plan_multinode(schedule: NetworkSchedule, graph: LayerGraph,
     candidates conservatively (width must divide the batch; parts must
     fit the node budget) and keeps the top-``k`` prefixes per state —
     the inter-layer tier's prune-then-prioritize shape, one level up.
+
+    ``explain``, when an ``obs.explain.ExplainSink``, receives this
+    tier's placement funnel (width candidates enumerated -> batch-
+    divisibility valid -> DP-frontier kept) plus the winning placement
+    and its frontier runners-up with cost deltas.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; "
@@ -406,6 +412,27 @@ def plan_multinode(schedule: NetworkSchedule, graph: LayerGraph,
             f"no valid placement of {S} segments on {mesh.nodes} "
             f"node(s) for graph {graph.name!r}", permanent=True)
     _, best_raw, _ = frontier[S][0]
+    if explain is not None:
+        best_cost = float(frontier[S][0][0][0])
+        runners = []
+        for rank, (ck, raw, _) in enumerate(frontier[S][1:], start=2):
+            delta = float(ck[0]) - best_cost
+            runners.append({
+                "rank": rank, "cost": float(ck[0]), "delta": delta,
+                "delta_frac": delta / best_cost if best_cost else 0.0,
+                "parts": [[s0, s1, list(nodes)]
+                          for s0, s1, nodes in raw]})
+        explain.set_multinode({
+            "mesh": dataclasses.asdict(mesh),
+            "objective": objective,
+            "funnel": {"total": stats.total,
+                       "after_validity": stats.after_validity,
+                       "kept": stats.kept},
+            "winner": {"cost": best_cost,
+                       "parts": [[s0, s1, list(nodes)]
+                                 for s0, s1, nodes in best_raw]},
+            "runners_up": runners,
+        })
     return _finish_plan(schedule, best_raw, segcosts, flows, mesh, hw,
                         objective, stats)
 

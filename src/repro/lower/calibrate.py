@@ -169,6 +169,7 @@ def run_calibration(hw: Optional[HWTemplate] = None, quick: bool = True,
     ``backend``, so ``load_calibration`` installs it per backend —
     compiled-backend coefficients never price interpreter runs."""
     from ..kernels.backend import resolve_backend
+    from .netexec import record_latency_drift
     backend = resolve_backend(backend, interpret)
     hw = hw if hw is not None else default_hw()
     layers = list(layers) if layers is not None else default_sweep(quick)
@@ -209,6 +210,10 @@ def run_calibration(hw: Optional[HWTemplate] = None, quick: bool = True,
                 jax.block_until_ready(run(inputs))
                 best = min(best, time.perf_counter() - t0)
             entry["measured_seconds"] = best
+            # per-kernel drift sample: the watchdog sees the sweep's
+            # predicted-vs-measured pairs, not only network-level ones
+            record_latency_drift(entry["predicted_seconds_raw"], best,
+                                 source="calibration", backend=backend)
             pairs.append(entry)
 
     record: Dict = {

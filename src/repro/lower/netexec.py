@@ -41,7 +41,7 @@ import numpy as np
 
 from ..kernels import ref
 from ..kernels.backend import backend_interprets, resolve_backend
-from ..obs import metrics, trace
+from ..obs import metrics, trace, watch
 from ..workloads.layers import LayerSpec
 from .exec import (_check_compiled_revisit_order, _run_conv, _run_eltwise,
                    _run_fc, _run_pool, input_extent, rel_error)
@@ -394,6 +394,8 @@ def record_latency_drift(predicted_seconds: Optional[float],
         return None
     ratio = measured_seconds / predicted_seconds
     _m_drift.observe(ratio, source=source, backend=backend)
+    watch.note_sample(predicted_seconds, measured_seconds,
+                      source=source, backend=backend)
     trace.instant("netexec.latency_drift", source=source, backend=backend,
                   ratio=round(ratio, 4))
     return ratio

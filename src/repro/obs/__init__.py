@@ -22,11 +22,21 @@ Three switches::
     with trace.tracing(path):  # metrics + spans, exported on exit
         ...
 
+``obs.explain``
+    The solver flight recorder: candidate funnel, winner cost
+    attribution and runners-up, collected when a solve runs with
+    ``explain=True`` and rendered by ``python -m repro.obs explain``.
+``obs.watch``
+    The drift watchdog: predicted-vs-measured latency health, rolling
+    per-backend baselines, calibration fit-quality and bench-regression
+    checks (``python -m repro.obs watch [--gate]``).
+
 ``python -m repro.obs summarize TRACE.json`` aggregates an exported
-trace; ``python -m repro.obs metrics [--prom]`` dumps the registry.
+trace (``--critical-path`` adds self-time and the dominant chain);
+``python -m repro.obs metrics [--prom]`` dumps the registry.
 See README "Observability" for the event/metric naming scheme.
 """
-from . import metrics, trace
+from . import explain, metrics, trace, watch
 from .metrics import (REGISTRY, Counter, CounterGroup, Gauge, Histogram,
                       Registry, counter, gauge, histogram)
 from .trace import Tracer, instant, span, tracing
@@ -45,6 +55,7 @@ def on() -> None:
     metrics.set_off(False)
 
 
-__all__ = ["metrics", "trace", "span", "instant", "tracing", "Tracer",
-           "REGISTRY", "Registry", "Counter", "Gauge", "Histogram",
-           "CounterGroup", "counter", "gauge", "histogram", "off", "on"]
+__all__ = ["metrics", "trace", "explain", "watch", "span", "instant",
+           "tracing", "Tracer", "REGISTRY", "Registry", "Counter",
+           "Gauge", "Histogram", "CounterGroup", "counter", "gauge",
+           "histogram", "off", "on"]

@@ -1,30 +1,98 @@
 """Observability CLI.
 
-    python -m repro.obs summarize TRACE.json [--json]
+    python -m repro.obs summarize TRACE.json [--critical-path] [--json]
     python -m repro.obs metrics [SNAPSHOT.json] [--prom | --json]
+    python -m repro.obs explain <sig|net> [--batch N] [--store-dir DIR]
+    python -m repro.obs watch [--calibration REC.json ...]
+                              [--bench CUR.json=BASE.json ...]
+                              [--metrics SNAPSHOT.json] [--state FILE]
+                              [--out BENCH_drift.json] [--gate] [--json]
 
 ``summarize`` aggregates an exported Chrome trace-event file (per-span
 count / total / max duration, instant-event counts, thread rows) — the
 quick look before opening the file in Perfetto (https://ui.perfetto.dev).
+``--critical-path`` adds per-span *self* time (nesting removed) and the
+dominant root-to-leaf span chain.  Given a metrics-snapshot JSON instead
+of a trace, it renders the registry families with interpolated
+p50/p95/p99 for every histogram series.
 ``metrics`` renders a registry snapshot: from a ``BENCH_obs.json`` /
 ``stats --json`` style file when given (any JSON whose top level or
 ``metrics`` key is a registry snapshot), else the live in-process
 registry (empty in a fresh CLI process — useful mainly under a driver
 that populated it).  ``--prom`` emits Prometheus text exposition.
+``explain`` renders a solver flight-recorder record: from a stored
+schedule (by signature or net name, searching ``--store-dir``), else by
+solving the named net fresh with ``explain=True``.
+``watch`` runs the drift watchdog (calibration fit quality, bench
+regressions vs committed baselines, drift quantiles + rolling EWMA
+baselines); ``--gate`` exits non-zero on any error finding (CI hook).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
+import os
 import sys
 from typing import List, Optional
 
-from . import metrics, trace
+from . import metrics, trace, watch
+from .explain import render as render_explain
+from .metrics import series_quantiles
+
+
+def _fmt_q(v: float) -> str:
+    return "n/a" if not math.isfinite(v) else f"{v:.4g}"
+
+
+def _looks_like_snapshot(d) -> bool:
+    return isinstance(d, dict) and "traceEvents" not in d and any(
+        isinstance(v, dict) and "kind" in v and "series" in v
+        for v in d.values())
+
+
+def _render_snapshot(snap: dict) -> None:
+    for name in sorted(snap):
+        fam = snap[name]
+        print(f"{name} ({fam.get('kind', '?')}) — "
+              f"{fam.get('help', '')}")
+        for s in fam.get("series", []):
+            labels = ",".join(f"{k}={v}" for k, v in s["labels"].items())
+            if "count" in s:            # histogram series
+                mean = s["sum"] / s["count"] if s["count"] else 0.0
+                q = series_quantiles(s)
+                print(f"  {{{labels}}} count={s['count']} "
+                      f"mean={mean:.6g} sum={s['sum']:.6g} "
+                      f"p50={_fmt_q(q['p50'])} p95={_fmt_q(q['p95'])} "
+                      f"p99={_fmt_q(q['p99'])}")
+            else:
+                print(f"  {{{labels}}} {s['value']:g}")
+    if not snap:
+        print("(registry is empty)")
 
 
 def cmd_summarize(args) -> int:
-    events = trace.load_events(args.trace)
+    with open(args.trace) as f:
+        d = json.load(f)
+    if _looks_like_snapshot(d):
+        # a metrics snapshot, not a trace: families + quantiles
+        snap = d.get("metrics", d) if "metrics" in d and \
+            isinstance(d.get("metrics"), dict) else d
+        if args.json:
+            out = {name: {"quantiles": [
+                {"labels": s["labels"], **series_quantiles(s)}
+                for s in fam.get("series", []) if "count" in s]}
+                for name, fam in snap.items()}
+            json.dump(out, sys.stdout, indent=1)
+            print()
+            return 0
+        _render_snapshot(snap)
+        return 0
+    events = d["traceEvents"] if isinstance(d, dict) else d
     s = trace.summarize_events(events)
+    if args.critical_path:
+        s["self_times"] = trace.self_times(events)
+        s["critical_path"] = trace.critical_path(events)
     if args.json:
         json.dump(s, sys.stdout, indent=1)
         print()
@@ -44,6 +112,24 @@ def cmd_summarize(args) -> int:
         print("instant events:")
         for name in sorted(s["instants"]):
             print(f"  {name}: {s['instants'][name]}")
+    if args.critical_path:
+        st = s["self_times"]
+        if st:
+            print("self time (count / total ms / self ms):")
+            width = max(len(n) for n in st)
+            for name in sorted(st, key=lambda n: -st[n]["self_us"]):
+                r = st[name]
+                print(f"  {name:<{width}}  {r['count']:>6}  "
+                      f"{r['total_us'] / 1e3:>10.2f}  "
+                      f"{r['self_us'] / 1e3:>10.2f}")
+        cp = s["critical_path"]
+        if cp:
+            print("critical path (longest nested span chain):")
+            for step in cp:
+                print(f"  {step['name']}  "
+                      f"{step['dur_us'] / 1e3:.2f} ms total, "
+                      f"{step['self_us'] / 1e3:.2f} ms self "
+                      f"({step['frac_of_root'] * 100:.0f}% of root)")
     print("open in Perfetto: https://ui.perfetto.dev (drag the file in)")
     return 0
 
@@ -86,20 +172,112 @@ def cmd_metrics(args) -> int:
         json.dump(snap, sys.stdout, indent=1)
         print()
         return 0
-    for name in sorted(snap):
-        fam = snap[name]
-        print(f"{name} ({fam.get('kind', '?')}) — "
-              f"{fam.get('help', '')}")
-        for s in fam.get("series", []):
-            labels = ",".join(f"{k}={v}" for k, v in s["labels"].items())
-            if "count" in s:            # histogram series
-                mean = s["sum"] / s["count"] if s["count"] else 0.0
-                print(f"  {{{labels}}} count={s['count']} "
-                      f"mean={mean:.6g} sum={s['sum']:.6g}")
-            else:
-                print(f"  {{{labels}}} {s['value']:g}")
-    if not snap:
-        print("(registry is empty)")
+    _render_snapshot(snap)
+    return 0
+
+
+# -- explain ------------------------------------------------------------------
+
+def _explain_from_store(target: str, store_dir: Optional[str]):
+    """Find a stored schedule by exact signature or by graph name;
+    returns its explain block (or None twice on no match)."""
+    from ..service.store import DEFAULT_ROOT, ScheduleStore
+    root = store_dir or DEFAULT_ROOT
+    if not os.path.isdir(root):
+        return None, None
+    store = ScheduleStore(root)
+    sigs = store.signatures()
+    if target in sigs:
+        rec = store.get_record(target)
+        return rec, (rec.schedule or {}).get("explain") if rec else None
+    for sig in sigs:
+        rec = store.get_record(sig)
+        if rec is not None and rec.graph_name == target:
+            return rec, (rec.schedule or {}).get("explain")
+    return None, None
+
+
+def cmd_explain(args) -> int:
+    target = args.target
+    rec, record = _explain_from_store(target, args.store_dir)
+    if rec is not None and record is None:
+        print(f"stored schedule {rec.signature} for {rec.graph_name} "
+              "has no explain block (solved without explain=True); "
+              "solving fresh", file=sys.stderr)
+    if record is None:
+        # not stored (or stored without a record): solve the net fresh
+        from ..core.solver import solve
+        from ..hw.presets import eyeriss_multinode
+        from ..workloads.nets import get_net
+        name, batch = target, args.batch
+        if "/b" in target:              # accept "resnet/b64" directly
+            name, _, b = target.rpartition("/b")
+            batch = int(b)
+        try:
+            net = get_net(name, batch=batch)
+        except Exception:
+            print(f"explain: {target!r} is neither a stored "
+                  "signature/net nor a registered net name",
+                  file=sys.stderr)
+            return 1
+        sched = solve(net, eyeriss_multinode(), explain=True)
+        record = sched.explain
+    if record is None:
+        print(f"explain: no record produced for {target!r}",
+              file=sys.stderr)
+        return 1
+    if args.json:
+        json.dump(record, sys.stdout, indent=1)
+        print()
+        return 0
+    print(render_explain(record))
+    return 0
+
+
+# -- watch --------------------------------------------------------------------
+
+def cmd_watch(args) -> int:
+    calibrations = []
+    cal_paths = list(args.calibration or [])
+    if not cal_paths and not args.bench and not args.metrics \
+            and os.path.exists("BENCH_calibration.json"):
+        cal_paths = ["BENCH_calibration.json"]    # bare-run default
+    for path in cal_paths:
+        with open(path) as f:
+            calibrations.append((os.path.basename(path), json.load(f)))
+    benches = []
+    for spec in args.bench or []:
+        cur_path, sep, base_path = spec.partition("=")
+        if not sep:
+            print(f"watch: --bench wants CURRENT.json=BASELINE.json, "
+                  f"got {spec!r}", file=sys.stderr)
+            return 2
+        with open(cur_path) as f:
+            cur = json.load(f)
+        with open(base_path) as f:
+            base = json.load(f)
+        benches.append((os.path.basename(cur_path), cur, base))
+    snapshot = None
+    if args.metrics:
+        snapshot = _snapshot_from_file(args.metrics)
+    elif metrics.REGISTRY.get("latency_drift_ratio") is not None:
+        snapshot = metrics.REGISTRY.snapshot()
+    state = watch.load_state(args.state) if args.state else None
+    report = watch.run_watch(calibrations=calibrations, benches=benches,
+                             snapshot=snapshot, state=state)
+    if args.state and state is not None:
+        watch.save_state(state, args.state)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    if args.json:
+        json.dump(report, sys.stdout, indent=1)
+        print()
+    else:
+        print(watch.render_report(report))
+    if args.gate and not report["ok"]:
+        return 1
     return 0
 
 
@@ -108,8 +286,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                                  description=__doc__)
     sub = ap.add_subparsers(dest="verb", required=True)
 
-    p = sub.add_parser("summarize", help="aggregate an exported trace")
-    p.add_argument("trace", help="Chrome trace-event JSON file")
+    p = sub.add_parser("summarize", help="aggregate an exported trace "
+                       "(or a metrics snapshot, with quantiles)")
+    p.add_argument("trace", help="Chrome trace-event JSON file (or a "
+                   "metrics snapshot JSON)")
+    p.add_argument("--critical-path", action="store_true",
+                   help="add self-time table and the dominant nested "
+                        "span chain")
     p.add_argument("--json", action="store_true",
                    help="machine-readable summary")
     p.set_defaults(fn=cmd_summarize)
@@ -122,6 +305,43 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--json", action="store_true",
                    help="raw snapshot JSON")
     p.set_defaults(fn=cmd_metrics)
+
+    p = sub.add_parser("explain", help="render a solver flight-recorder "
+                       "record (funnel, attribution, runners-up)")
+    p.add_argument("target", help="store signature, stored net name "
+                   "(e.g. resnet/b64), or registered net name")
+    p.add_argument("--batch", type=int, default=64,
+                   help="batch size when solving fresh (default 64)")
+    p.add_argument("--store-dir", default=None,
+                   help="schedule store to search (default: "
+                        ".repro_store / $REPRO_STORE_DIR)")
+    p.add_argument("--json", action="store_true",
+                   help="raw explain record JSON")
+    p.set_defaults(fn=cmd_explain)
+
+    p = sub.add_parser("watch", help="drift watchdog: calibration fit "
+                       "quality, bench regressions, drift baselines")
+    p.add_argument("--calibration", action="append", default=[],
+                   metavar="REC.json",
+                   help="calibration record(s) to health-check "
+                        "(default: ./BENCH_calibration.json if present)")
+    p.add_argument("--bench", action="append", default=[],
+                   metavar="CUR.json=BASE.json",
+                   help="bench record vs committed baseline "
+                        "(repeatable)")
+    p.add_argument("--metrics", default=None, metavar="SNAPSHOT.json",
+                   help="metrics snapshot with latency_drift_ratio "
+                        "(default: live registry when populated)")
+    p.add_argument("--state", default=None, metavar="FILE",
+                   help="rolling EWMA baseline state file "
+                        "(read + updated)")
+    p.add_argument("--out", default=None, metavar="BENCH_drift.json",
+                   help="write the full report JSON here")
+    p.add_argument("--gate", action="store_true",
+                   help="exit non-zero on any error finding (CI)")
+    p.add_argument("--json", action="store_true",
+                   help="print the report as JSON")
+    p.set_defaults(fn=cmd_watch)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -63,6 +63,58 @@ DRIFT_BUCKETS = (0.1, 0.25, 0.5, 0.75, 0.9, 1.0, 1.1, 1.25, 1.5, 2.0,
                  3.0, 5.0, 10.0, 25.0, 100.0)
 
 
+def escape_label_value(v: str) -> str:
+    """Prometheus text-format label-value escaping: backslash, double
+    quote and newline must be escaped inside the quoted value."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n",
+                                                               "\\n")
+
+
+def quantile_from_buckets(bounds: Sequence[float],
+                          cumulative: Sequence[float],
+                          count: float, q: float) -> float:
+    """Estimate the ``q``-quantile from cumulative bucket counts by
+    linear interpolation inside the straddling bucket (Prometheus
+    ``histogram_quantile`` semantics: the first finite bucket's lower
+    edge is 0, observations past the last finite bound clamp to it).
+
+    ``bounds`` are the finite upper edges (ascending) and ``cumulative``
+    the matching cumulative counts; ``count`` is the series total
+    (the ``+Inf`` bucket)."""
+    if count <= 0:
+        return float("nan")
+    target = q * count
+    prev_cum = 0.0
+    prev_bound = 0.0
+    for b, c in zip(bounds, cumulative):
+        if c >= target:
+            in_bucket = c - prev_cum
+            if in_bucket <= 0:
+                return float(b)
+            frac = (target - prev_cum) / in_bucket
+            return float(prev_bound + (b - prev_bound) * frac)
+        prev_cum, prev_bound = c, b
+    return float(bounds[-1]) if len(bounds) else float("nan")
+
+
+def series_quantiles(series: Dict,
+                     qs: Sequence[float] = (0.5, 0.95, 0.99)
+                     ) -> Dict[str, float]:
+    """Quantiles of one snapshot histogram series (the ``series()`` /
+    ``snapshot()`` dict shape: cumulative ``buckets`` with a ``+Inf``
+    key plus ``count``) — usable on live and JSON-loaded snapshots
+    alike, e.g. by the drift watchdog over ``BENCH_*.json`` records."""
+    buckets = series.get("buckets", {})
+    finite = sorted((float(k), v) for k, v in buckets.items()
+                    if k not in ("+Inf", "inf"))
+    bounds = [b for b, _ in finite]
+    cum = [c for _, c in finite]
+    count = series.get("count", 0)
+    return {f"p{round(q * 100)}": quantile_from_buckets(bounds, cum,
+                                                        count, q)
+            for q in qs}
+
+
 class Metric:
     """Base: a named family of labeled series."""
 
@@ -100,7 +152,8 @@ class Metric:
 
     # Prometheus text exposition -------------------------------------------
     def _fmt_labels(self, key: Tuple, extra: str = "") -> str:
-        parts = [f'{n}="{v}"' for n, v in zip(self.labelnames, key)]
+        parts = [f'{n}="{escape_label_value(v)}"'
+                 for n, v in zip(self.labelnames, key)]
         if extra:
             parts.append(extra)
         return "{" + ",".join(parts) + "}" if parts else ""
@@ -128,6 +181,19 @@ class Counter(Metric):
         key = self._key(labels)
         with self._lock:
             self._series[key] = self._series.get(key, 0.0) + amount
+
+    def expose(self) -> List[str]:
+        # Prometheus convention: counter sample names carry a _total
+        # suffix.  Families already named *_total are left alone.
+        name = self.name if self.name.endswith("_total") \
+            else self.name + "_total"
+        lines = [f"# HELP {name} {self.help}",
+                 f"# TYPE {name} {self.kind}"]
+        with self._lock:
+            items = sorted(self._series.items())
+        for k, v in items:
+            lines.append(f"{name}{self._fmt_labels(k)} {v}")
+        return lines
 
 
 class Gauge(Metric):
@@ -200,6 +266,20 @@ class Histogram(Metric):
             out.append({"labels": dict(zip(self.labelnames, k)),
                         "buckets": buckets, "sum": total, "count": n})
         return out
+
+    def quantile(self, q: float, **labels) -> float:
+        """Interpolated ``q``-quantile of one live series (see
+        ``quantile_from_buckets``; NaN when the series is empty)."""
+        with self._lock:
+            h = self._h.get(self._key(labels))
+            if h is None:
+                return float("nan")
+            counts, _, n = h
+        cum, cumulative = 0, []
+        for c in counts[:-1]:
+            cum += c
+            cumulative.append(cum)
+        return quantile_from_buckets(self.buckets, cumulative, n, q)
 
     def expose(self) -> List[str]:
         lines = [f"# HELP {self.name} {self.help}",
@@ -343,4 +423,6 @@ class CounterGroup:
 
 __all__ = ["Metric", "Counter", "Gauge", "Histogram", "Registry",
            "REGISTRY", "counter", "gauge", "histogram", "CounterGroup",
-           "LATENCY_BUCKETS", "DRIFT_BUCKETS", "set_off", "is_off"]
+           "LATENCY_BUCKETS", "DRIFT_BUCKETS", "set_off", "is_off",
+           "escape_label_value", "quantile_from_buckets",
+           "series_quantiles"]

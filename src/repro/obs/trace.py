@@ -276,6 +276,93 @@ def summarize_events(events: List[Dict]) -> Dict:
             "threads": {str(k): v for k, v in sorted(threads.items())}}
 
 
+def _nest_spans(events: List[Dict]) -> List[Dict]:
+    """Build per-(pid, tid) containment forests over the ``X`` events.
+
+    Chrome complete events carry no explicit parent links; within one
+    thread timeline, span A contains span B iff B's [ts, ts+dur) sits
+    inside A's.  Returns the root nodes; each node is
+    ``{event, children, self_us}`` with self time = own duration minus
+    the durations of direct children."""
+    by_thread: Dict = {}
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        key = (e.get("pid", 0), e.get("tid", 0))
+        by_thread.setdefault(key, []).append(e)
+    roots: List[Dict] = []
+    for evs in by_thread.values():
+        # sort by start asc, then duration desc: a parent sorts before
+        # any span it contains, so a simple open-span stack nests them
+        evs.sort(key=lambda e: (float(e.get("ts", 0.0)),
+                                -float(e.get("dur", 0.0))))
+        stack: List[Dict] = []
+        for e in evs:
+            ts = float(e.get("ts", 0.0))
+            dur = float(e.get("dur", 0.0))
+            node = {"event": e, "children": [], "self_us": dur}
+            while stack:
+                top = stack[-1]
+                t0 = float(top["event"].get("ts", 0.0))
+                t1 = t0 + float(top["event"].get("dur", 0.0))
+                if ts < t1 and ts + dur <= t1 + 1e-9:
+                    break
+                stack.pop()
+            if stack:
+                stack[-1]["children"].append(node)
+                stack[-1]["self_us"] -= dur
+            else:
+                roots.append(node)
+            stack.append(node)
+    return roots
+
+
+def self_times(events: List[Dict]) -> Dict[str, Dict]:
+    """Per-name self time (span duration minus direct children): where
+    the wall clock actually went, with double-counting from nesting
+    removed.  Returns ``{name: {count, total_us, self_us}}``."""
+    out: Dict[str, Dict] = {}
+
+    def walk(node: Dict) -> None:
+        name = node["event"].get("name", "?")
+        s = out.setdefault(name, {"count": 0, "total_us": 0.0,
+                                  "self_us": 0.0})
+        s["count"] += 1
+        s["total_us"] += float(node["event"].get("dur", 0.0))
+        s["self_us"] += max(0.0, node["self_us"])
+        for c in node["children"]:
+            walk(c)
+
+    for r in _nest_spans(events):
+        walk(r)
+    return out
+
+
+def critical_path(events: List[Dict]) -> List[Dict]:
+    """The longest root-to-leaf chain of nested spans: start from the
+    longest root and descend into the largest child at every level.
+    Each step reports name/duration/self time and its share of the root.
+    An approximation of "what must get faster for the run to get
+    faster" for the dominant serial timeline."""
+    roots = _nest_spans(events)
+    if not roots:
+        return []
+    node = max(roots, key=lambda n: float(n["event"].get("dur", 0.0)))
+    root_dur = float(node["event"].get("dur", 0.0)) or 1.0
+    path: List[Dict] = []
+    while node is not None:
+        dur = float(node["event"].get("dur", 0.0))
+        path.append({"name": node["event"].get("name", "?"),
+                     "dur_us": dur,
+                     "self_us": max(0.0, node["self_us"]),
+                     "frac_of_root": dur / root_dur,
+                     "args": node["event"].get("args", {})})
+        node = max(node["children"],
+                   key=lambda n: float(n["event"].get("dur", 0.0)),
+                   default=None)
+    return path
+
+
 __all__ = ["Tracer", "Span", "NOOP_SPAN", "span", "instant", "enabled",
            "enable", "disable", "current", "tracing", "load_events",
-           "summarize_events"]
+           "summarize_events", "self_times", "critical_path"]

@@ -93,6 +93,7 @@ def autotune_network(graph: LayerGraph, hw: HWTemplate,
                      tol: float = 1e-3,
                      candidate_timeout_s: Optional[float] = None,
                      backend: Optional[str] = None,
+                     explain: bool = False,
                      **options) -> Dict:
     """Autotune one network; returns a JSON-safe report.  Candidates that
     fail to lower or verify — or that crash, return a non-finite
@@ -113,7 +114,8 @@ def autotune_network(graph: LayerGraph, hw: HWTemplate,
 
     opts = solver_options(**options)
     t0 = time.perf_counter()
-    cands = solve_topk(graph, hw, k=k, max_workers=max_workers, **opts)
+    cands = solve_topk(graph, hw, k=k, max_workers=max_workers,
+                       explain=explain, **opts)
     entries: List[Dict] = []
     skipped: List[Dict] = []
     for rank, sched in enumerate(cands):

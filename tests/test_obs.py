@@ -517,3 +517,378 @@ def test_service_cli_stats_json_and_prom(tmp_path, capsys):
     text = capsys.readouterr().out
     assert "# TYPE service_requests_total counter" in text
     assert "service_request_seconds_bucket" in text
+
+
+# ---------------------------------------------------------------------------
+# flight recorder: explain records
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def explained():
+    net = get_net("mlp", batch=4)
+    memo.clear_all()
+    sched = solve(net, HW, max_seg_len=2, explain=True)
+    assert sched.valid and sched.explain is not None
+    return net, sched
+
+
+def test_explain_funnel_matches_prune_stats(explained):
+    from repro.core.solver.interlayer import PruneStats, segment_pool
+    net, sched = explained
+    stats = PruneStats()
+    segment_pool(net, HW, range(len(net.layers)), max_len=2,
+                 stats=stats)
+    tot = sched.explain["funnel"]["totals"]
+    assert tot["enumerated"] == stats.total
+    assert tot["after_validity"] == stats.after_validity
+    assert tot["after_pareto"] == stats.after_pareto
+    # per-group counts sum to the totals
+    groups = sched.explain["funnel"]["groups"]
+    assert sum(g["enumerated"] for g in groups) == tot["enumerated"]
+    assert sum(g["valid"] for g in groups) == tot["after_validity"]
+    assert sum(g["kept"] for g in groups) == tot["after_pareto"]
+    # the winner's segment groups are a subset of all groups
+    win = sched.explain["funnel"]["winner_groups"]
+    chain = {(s.start, s.stop) for s in sched.chain.segments}
+    assert {(g["start"], g["stop"]) for g in win} == chain
+
+
+def test_explain_attribution_sums_to_energy(explained):
+    from repro.obs.explain import TERM_ORDER
+    _, sched = explained
+    winner = sched.explain["winner"]
+    attrib = winner["attribution"]
+    total = sum(attrib[t] for t in TERM_ORDER)
+    assert total == pytest.approx(sched.total_energy_pj, rel=1e-6)
+    assert winner["energy_pj"] == pytest.approx(sched.total_energy_pj)
+    # per-segment attributions also sum to the whole
+    seg_total = sum(sum(s["attribution"][t] for t in TERM_ORDER)
+                    for s in winner["segments"])
+    assert seg_total == pytest.approx(sched.total_energy_pj, rel=1e-6)
+
+
+def test_explain_runners_up_are_ranked(explained):
+    _, sched = explained
+    runners = sched.explain["runners_up"]
+    assert runners, "top-k solve should leave runners-up"
+    deltas = [r["delta"] for r in runners]
+    assert all(d >= 0 for d in deltas)
+    assert deltas == sorted(deltas)
+    assert [r["rank"] for r in runners] == \
+        list(range(2, 2 + len(runners)))
+
+
+def test_explain_round_trips_through_store(tmp_path, explained):
+    from repro.core.solver.kapla import NetworkSchedule
+    net, sched = explained
+    back = NetworkSchedule.from_json(sched.to_json(), net)
+    assert back.explain == sched.explain
+    store = ScheduleStore(str(tmp_path))
+    rec = store.put(sched, net, HW, {"max_seg_len": 2})
+    got = store.get_record(rec.signature)
+    assert got.schedule["explain"] == sched.explain
+
+
+def test_explain_disabled_by_default(solved):
+    _, sched = solved
+    assert sched.explain is None
+    assert "explain" in sched.to_json()     # field persists (as null)
+
+
+def test_multinode_explain_funnel(explained):
+    from repro.obs.explain import ExplainSink, render
+    net, sched = explained
+    sink = ExplainSink()
+    plan = plan_multinode(sched, net, HW, NodeMesh(nodes=4),
+                          explain=sink)
+    mn = sink.to_json()["multinode"]
+    assert mn["funnel"]["total"] >= mn["funnel"]["after_validity"] \
+        >= mn["funnel"]["kept"] > 0
+    assert mn["winner"]["cost"] == pytest.approx(plan.est_cost)
+    # the winning parts cover every segment exactly once, in order
+    spans = [(p[0], p[1]) for p in mn["winner"]["parts"]]
+    assert spans[0][0] == 0 and spans[-1][1] == plan.n_segments
+    assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+    assert "multinode:" in render(sink.to_json())
+
+
+def test_explain_cli_renders_stored_record(tmp_path, capsys, explained):
+    from repro.obs.__main__ import main
+    net, sched = explained
+    store = ScheduleStore(str(tmp_path))
+    rec = store.put(sched, net, HW, {"max_seg_len": 2})
+    assert main(["explain", rec.signature,
+                 "--store-dir", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "candidate funnel" in out and "cost attribution" in out
+    # lookup by net name hits the same record
+    assert main(["explain", net.name, "--store-dir", str(tmp_path),
+                 "--json"]) == 0
+    d = json.loads(capsys.readouterr().out)
+    assert d == sched.explain
+
+
+# ---------------------------------------------------------------------------
+# histogram quantiles
+# ---------------------------------------------------------------------------
+
+def test_histogram_quantiles_interpolate():
+    from repro.obs.metrics import series_quantiles
+    r = Registry()
+    h = r.histogram("q_seconds", "q", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 1.5, 3.0, 3.5):
+        h.observe(v)
+    # p50: target 2.5 of 5 lands in (1, 2] with cum 1 -> 3
+    assert h.quantile(0.5) == pytest.approx(1.75)
+    assert h.quantile(0.95) == pytest.approx(3.75)
+    # observations past the top bucket clamp to the highest finite bound
+    h.observe(100.0)
+    assert h.quantile(0.999) == pytest.approx(4.0)
+    # the snapshot-series helper agrees with the live one
+    (s,) = h.series()
+    q = series_quantiles(s)
+    assert q["p50"] == pytest.approx(h.quantile(0.5))
+    assert q["p95"] == pytest.approx(h.quantile(0.95))
+    # empty series
+    assert np.isnan(r.histogram("empty_seconds").quantile(0.5))
+
+
+def test_cli_summarize_surfaces_quantiles(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    r = Registry()
+    h = r.histogram("lat_seconds", "lat", ("source",),
+                    buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 1.5, 3.0, 3.5):
+        h.observe(v, source="unit")
+    path = str(tmp_path / "snap.json")
+    with open(path, "w") as f:
+        json.dump(r.snapshot(), f)
+    assert main(["summarize", path]) == 0
+    out = capsys.readouterr().out
+    assert "p50=1.75" in out and "p95=3.75" in out
+    assert main(["metrics", path]) == 0
+    assert "p50=1.75" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text-exposition conformance
+# ---------------------------------------------------------------------------
+
+def test_prometheus_label_values_escaped():
+    r = Registry()
+    r.counter("odd_total", "odd", ("path",)).inc(
+        path='a"b\\c\nd')
+    text = r.exposition()
+    assert 'odd_total{path="a\\"b\\\\c\\nd"} 1.0' in text
+    # the raw specials never appear unescaped inside the value
+    assert '\n' not in text.split('odd_total{path="', 1)[1] \
+        .split('"}')[0]
+
+
+def test_prometheus_counter_total_suffix():
+    r = Registry()
+    r.counter("req", "requests").inc()
+    r.counter("done_total", "done").inc()
+    text = r.exposition()
+    # unsuffixed counters gain _total on exposition (sample + metadata)
+    assert "# TYPE req_total counter" in text
+    assert "req_total 1.0" in text
+    assert "req 1.0" not in text.replace("req_total", "")
+    # already-suffixed names are not doubled
+    assert "done_total_total" not in text
+    assert "done_total 1.0" in text
+
+
+def test_prometheus_histogram_le_ordering_and_inf():
+    r = Registry()
+    h = r.histogram("lat_seconds", "lat", buckets=(4.0, 1.0, 2.0))
+    for v in (0.5, 1.5, 3.0, 9.0):
+        h.observe(v)
+    text = r.exposition()
+    les = [line.split('le="')[1].split('"')[0]
+           for line in text.splitlines() if "_bucket" in line]
+    assert les == ["1.0", "2.0", "4.0", "+Inf"]     # sorted, +Inf last
+    counts = [float(line.rsplit(" ", 1)[1])
+              for line in text.splitlines() if "_bucket" in line]
+    assert counts == sorted(counts)                 # cumulative
+    inf_count = counts[-1]
+    (count_line,) = [line for line in text.splitlines()
+                     if line.startswith("lat_seconds_count")]
+    assert float(count_line.rsplit(" ", 1)[1]) == inf_count == 4
+
+
+# ---------------------------------------------------------------------------
+# trace analytics: self time + critical path
+# ---------------------------------------------------------------------------
+
+def _x(name, ts, dur, tid=1):
+    return {"name": name, "ph": "X", "pid": 1, "tid": tid,
+            "ts": ts, "dur": dur, "args": {}}
+
+
+def test_self_times_subtract_children():
+    events = [_x("root", 0.0, 100.0), _x("child", 10.0, 60.0),
+              _x("leaf", 20.0, 30.0), _x("other", 0.0, 5.0, tid=2)]
+    st = trace.self_times(events)
+    assert st["root"]["self_us"] == pytest.approx(40.0)
+    assert st["child"]["self_us"] == pytest.approx(30.0)
+    assert st["leaf"]["self_us"] == pytest.approx(30.0)
+    assert st["other"]["self_us"] == pytest.approx(5.0)
+
+
+def test_critical_path_descends_longest_children():
+    events = [_x("root", 0.0, 100.0),
+              _x("small", 5.0, 10.0), _x("big", 20.0, 70.0),
+              _x("deep", 25.0, 40.0)]
+    cp = trace.critical_path(events)
+    assert [s["name"] for s in cp] == ["root", "big", "deep"]
+    assert cp[0]["frac_of_root"] == pytest.approx(1.0)
+    assert cp[1]["frac_of_root"] == pytest.approx(0.7)
+    assert trace.critical_path([]) == []
+
+
+def test_cli_summarize_critical_path(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    path = str(tmp_path / "t.json")
+    with trace.tracing(path):
+        with trace.span("outer.op"):
+            with trace.span("inner.op"):
+                pass
+    assert main(["summarize", path, "--critical-path"]) == 0
+    out = capsys.readouterr().out
+    assert "critical path" in out and "self time" in out
+    assert main(["summarize", path, "--critical-path", "--json"]) == 0
+    d = json.loads(capsys.readouterr().out)
+    assert [s["name"] for s in d["critical_path"]] == \
+        ["outer.op", "inner.op"]
+    assert "outer.op" in d["self_times"]
+
+
+# ---------------------------------------------------------------------------
+# drift watchdog
+# ---------------------------------------------------------------------------
+
+def _synthetic_calibration(n=12):
+    """A healthy calibration record: measurements that ARE the affine
+    model (plus deterministic jitter), with matching coefficients."""
+    from repro.obs.watch import rank_correlation
+    a_c, a_d, a_g, a_s, b = 2e-8, 1e-8, 5e-8, 1e-4, -0.002
+    pairs = []
+    for i in range(1, n + 1):
+        cyc_c, cyc_d, cyc_g = 1e5 * i, 4e4 * i * i, 2e4 * i
+        steps = 10 * i
+        measured = (a_c * cyc_c + a_d * cyc_d + a_g * cyc_g
+                    + a_s * steps + b) * (1.0 + 0.01 * ((i % 3) - 1))
+        pairs.append({"cyc_compute": cyc_c, "cyc_dram": cyc_d,
+                      "cyc_gbuf": cyc_g, "grid_steps": steps,
+                      "measured_seconds": measured})
+    cal = {"a_compute": a_c, "a_dram": a_d, "a_gbuf": a_g,
+           "a_step": a_s, "intercept": b, "backend": "interpret"}
+    pred = [a_c * p["cyc_compute"] + a_d * p["cyc_dram"]
+            + a_g * p["cyc_gbuf"] + a_s * p["grid_steps"] + b
+            for p in pairs]
+    return {"backend": "interpret", "pairs": pairs, "calibration": cal,
+            "spearman_calibrated": rank_correlation(
+                pred, [p["measured_seconds"] for p in pairs])}
+
+
+def test_watch_passes_healthy_calibration():
+    from repro.obs import watch
+    findings = []
+    out = watch.check_calibration_record(_synthetic_calibration(),
+                                         "healthy", findings)
+    assert out["ok"] and not findings
+    assert out["r2"] > 0.9 and out["rank_corr"] > 0.9
+
+
+def test_watch_flags_seeded_corrupted_calibration(tmp_path, capsys):
+    from repro.obs import watch
+    from repro.obs.__main__ import main
+    # seeded fault: corrupt one fitted coefficient by 100x — every
+    # field still "looks" plausible, only the fit quality betrays it
+    bad = _synthetic_calibration()
+    bad["calibration"]["a_dram"] *= 100.0
+    findings = []
+    out = watch.check_calibration_record(bad, "corrupt", findings)
+    assert not out["ok"]
+    assert any(f["severity"] == "error" for f in findings)
+    # ...and through the CLI, --gate turns that into a non-zero exit
+    good_p = str(tmp_path / "good.json")
+    bad_p = str(tmp_path / "bad.json")
+    with open(good_p, "w") as f:
+        json.dump(_synthetic_calibration(), f)
+    with open(bad_p, "w") as f:
+        json.dump(bad, f)
+    assert main(["watch", "--calibration", good_p, "--gate"]) == 0
+    capsys.readouterr()
+    drift_out = str(tmp_path / "BENCH_drift.json")
+    assert main(["watch", "--calibration", bad_p, "--gate",
+                 "--out", drift_out]) == 1
+    assert "FAILING" in capsys.readouterr().out
+    with open(drift_out) as f:
+        report = json.load(f)
+    assert not report["ok"] and report["n_errors"] >= 1
+
+
+def test_watch_flags_stale_calibration_record():
+    from repro.obs import watch
+    rec = _synthetic_calibration()
+    rec["spearman_calibrated"] = 0.2    # stored fit != its own pairs
+    findings = []
+    watch.check_calibration_record(rec, "stale", findings)
+    assert any("stale" in f["message"] for f in findings)
+
+
+def test_watch_bench_regression_quality_vs_timing():
+    from repro.obs import watch
+    base = {"spearman_network": 0.95, "cold_seconds": 0.5,
+            "nested": {"availability": 1.0}}
+    # quality drop -> error; timing growth -> warning
+    cur = {"spearman_network": 0.4, "cold_seconds": 2.0,
+           "nested": {"availability": 1.0}}
+    findings = []
+    out = watch.check_bench_regression("b", cur, base, findings)
+    assert not out["ok"]
+    sev = {f["message"].split(":")[0]: f["severity"] for f in findings}
+    assert sev["spearman_network"] == "error"
+    assert sev["cold_seconds"] == "warn"
+    # within tolerance -> clean
+    findings = []
+    out = watch.check_bench_regression("b", dict(base), base, findings)
+    assert out["ok"] and not findings
+
+
+def test_watch_drift_quantiles_and_rolling_baseline():
+    from repro.obs import watch
+    reg = Registry()
+    h = reg.histogram("latency_drift_ratio", "drift",
+                      ("source", "backend"),
+                      buckets=metrics.DRIFT_BUCKETS)
+    for r in (0.95, 1.0, 1.05, 1.1):
+        h.observe(r, source="unit", backend="interpret")
+    drift = watch.drift_from_snapshot(reg.snapshot())
+    key = "unit|interpret"
+    assert drift[key]["count"] == 4
+    assert 0.8 < drift[key]["p50"] < 1.2
+    # first pass seeds the baseline, a 3x shift on the next flags it
+    state = {"baselines": {}}
+    findings = []
+    watch.update_baselines(state, drift, findings)
+    assert not findings
+    shifted = {key: {"count": 4, "p50": drift[key]["p50"] * 3.0,
+                     "p95": 3.0, "p99": 3.0}}
+    watch.update_baselines(state, shifted, findings)
+    assert findings and findings[0]["check"] == "drift"
+    assert state["baselines"][key]["n"] == 2
+
+
+def test_watch_sample_ring_feeds_from_netexec():
+    from repro.obs import watch
+    watch.clear_samples()
+    record_latency_drift(0.010, 0.012, source="ring", backend="unit")
+    record_latency_drift(0.010, 0.014, source="ring", backend="unit")
+    rep = watch.samples_report()
+    assert rep["ring|unit"]["count"] == 2
+    assert rep["ring|unit"]["median_ratio"] == pytest.approx(1.3)
+    watch.clear_samples()
+    assert watch.samples_report() == {}
